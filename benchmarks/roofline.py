@@ -1,0 +1,160 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled per-device module:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+(equivalent to the total/(chips * rate) formulation — cost_analysis of
+the SPMD-partitioned module is per device).  Hardware: TPU v5e-like,
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+MODEL_FLOPS (useful work): train 6*N*D, prefill 2*N*D, decode 2*N*B
+tokens, with N = active params for MoE.  The ratio MODEL_FLOPS /
+HLO_FLOPs exposes remat recompute and dense-MoE dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / link
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    variant: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    temp_bytes: float
+    rec: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return (self.model_flops_per_dev / self.hlo_flops_per_dev
+                if self.hlo_flops_per_dev else 0.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achieved fraction of the compute roofline if the cell ran at
+        its modeled bound: useful_flops / (bound_time * peak)."""
+        if self.bound_s <= 0:
+            return 0.0
+        return self.model_flops_per_dev / (self.bound_s * PEAK_FLOPS)
+
+
+def model_flops_per_device(rec: dict) -> float:
+    from repro.configs import get_arch, get_shape
+    cfg = get_arch(rec["arch"])
+    shape = get_shape(rec["shape"])
+    n = rec.get("n_params_active") or rec.get("n_params") or \
+        cfg.param_count(active_only=True)
+    chips = 512 if rec["mesh"] == "multi" else 256
+    if shape.kind == "train":
+        total = 6.0 * n * shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        total = 2.0 * n * shape.seq_len * shape.global_batch
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR,
+               variant: Optional[str] = "baseline") -> List[Cell]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if variant is not None and rec.get("variant") != variant:
+            continue
+        if not rec.get("ok"):
+            continue
+        chips = 512 if rec["mesh"] == "multi" else 256
+        # loop-aware analysis (repro.runtime.hlo_cost); the raw XLA
+        # cost_analysis counts while bodies once and is kept in rec["cost"]
+        c2 = rec.get("cost2", {})
+        flops = c2.get("flops", rec["cost"].get("flops", 0.0))
+        byts = c2.get("bytes", rec["cost"].get("bytes_accessed", 0.0))
+        coll = c2.get("collective_bytes",
+                      rec.get("collectives", {}).get("total", 0.0))
+        cells.append(Cell(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            variant=rec.get("variant", "baseline"), chips=chips,
+            compute_s=flops / PEAK_FLOPS,
+            memory_s=byts / HBM_BW,
+            collective_s=coll / LINK_BW,
+            model_flops_per_dev=model_flops_per_device(rec),
+            hlo_flops_per_dev=flops,
+            temp_bytes=float(rec.get("memory", {}).get(
+                "temp_size_in_bytes", 0) or 0),
+            rec=rec))
+    return cells
+
+
+def table(cells: List[Cell], mesh: str = "single") -> str:
+    rows = [c for c in cells if c.mesh == mesh]
+    rows.sort(key=lambda c: (c.arch, c.shape))
+    out = ["| arch | shape | compute s | memory s | coll s | dominant | "
+           "useful | roofline frac | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for c in rows:
+        out.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.2e} | "
+            f"{c.memory_s:.2e} | {c.collective_s:.2e} | {c.dominant} | "
+            f"{c.useful_ratio:.2f} | {c.roofline_fraction:.3f} | "
+            f"{c.temp_bytes / 1e9:.1f} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(cells: List[Cell]) -> Dict[str, Cell]:
+    single = [c for c in cells if c.mesh == "single"]
+    worst = min(single, key=lambda c: c.roofline_fraction or 1.0)
+    coll = max(single, key=lambda c: c.collective_s /
+               max(c.bound_s, 1e-30))
+    # most representative of the paper: a memory-bound decode cell on a
+    # big dense arch (binary-weight packing is the paper's lever)
+    decs = [c for c in single if c.shape in ("decode_32k", "long_500k")]
+    rep = max(decs, key=lambda c: c.memory_s) if decs else worst
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main():
+    cells = load_cells()
+    for mesh in ("single", "multi"):
+        print(f"\n### Roofline — {mesh} pod "
+              f"({512 if mesh == 'multi' else 256} chips)\n")
+        print(table(cells, mesh))
+    picks = pick_hillclimb(cells)
+    print("\n### Hillclimb picks")
+    for k, c in picks.items():
+        print(f"  {k}: {c.arch} x {c.shape} (dominant={c.dominant}, "
+              f"frac={c.roofline_fraction:.3f})")
+
+
+if __name__ == "__main__":
+    main()

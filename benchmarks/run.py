@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table + kernel microbench +
+roofline summary.  ``PYTHONPATH=src python -m benchmarks.run``"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import table1, table2, table3, table4_5, kernels_bench
+    results = {}
+    results["table1"] = table1.run()
+    results["table2"] = table2.run()
+    results["table3"] = table3.run()
+    results["table4_5"] = table4_5.run()
+    results["kernels"] = kernels_bench.run()
+    try:
+        from benchmarks import roofline
+        cells = roofline.load_cells()
+        if cells:
+            print(f"\n== Roofline (from {len(cells)} dry-run cells; see "
+                  "EXPERIMENTS.md for the full table) ==")
+            picks = roofline.pick_hillclimb(cells)
+            for k, c in picks.items():
+                print(f"  {k}: {c.arch} x {c.shape} "
+                      f"(dominant={c.dominant}, "
+                      f"useful={c.useful_ratio:.2f})")
+        else:
+            print("\n(no dry-run artifacts found; run "
+                  "python -m repro.launch.dryrun --all first)")
+    except Exception as e:
+        print(f"roofline summary skipped: {e}")
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

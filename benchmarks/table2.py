@@ -1,0 +1,57 @@
+"""Table II: fully-reconfigurable MAC vs TULIP-PE for a 288-input node
+(3x3 kernel over 32 IFMs), plus the scheduler design-space study.
+
+The cycle count for the TULIP-PE comes from *our* RPO scheduler — the
+paper reports 441; the naive sequential schedule, the compacting list
+scheduler, and the bit-parallel leaf variant bracket it.
+"""
+from repro.core.adder_tree import schedule_tree, storage_bound
+from repro.core.energy import CellSpecs, pe_cycles, mac_cycles
+
+
+def run(log=print):
+    s = CellSpecs()
+    n = 288
+    naive = schedule_tree(n, threshold=n // 2, compact=False)
+    compact = schedule_tree(n, threshold=n // 2, compact=True)
+    mac_cy = mac_cycles(n, s)
+    period_ns = 1e9 / s.freq_hz
+
+    log("\n== Table II: MAC vs TULIP-PE, 288-input node ==")
+    log(f"{'metric':22s} {'MAC (B)':>12s} {'TULIP-PE (T)':>12s} "
+        f"{'B/T':>8s} {'paper B/T':>9s}")
+    rows = [
+        ("Area (um^2)", s.mac_area_um2, s.pe_area_um2, 23.18),
+        ("Power (mW)", s.mac_power_mw, s.pe_power_mw, 59.75),
+        ("Cycles", mac_cy, compact.cycles, 0.038),
+    ]
+    for name, b, t, paper in rows:
+        log(f"{name:22s} {b:12.2f} {t:12.2f} {b / t:8.2f} {paper:9.2f}")
+    tb = mac_cy * period_ns
+    tt = compact.cycles * period_ns
+    log(f"{'Time (ns)':22s} {tb:12.1f} {tt:12.1f} {tb / tt:8.3f} "
+        f"{'0.038':>9s}")
+    pdp_b = s.mac_power_mw * tb
+    pdp_t = s.pe_power_mw * tt
+    log(f"{'PDP (mW*ns)':22s} {pdp_b:12.1f} {pdp_t:12.1f} "
+        f"{pdp_b / pdp_t:8.2f} {'2.27':>9s}")
+
+    log("\n-- scheduler design space (ours vs paper's 441 cycles) --")
+    log(f"  naive sequential RPO : {naive.cycles} cycles")
+    log(f"  compacting list sched: {compact.cycles} cycles "
+        f"({(naive.cycles - compact.cycles) / naive.cycles:.0%} saved)")
+    wide = schedule_tree(n, threshold=n // 2, compact=True, n_ext=6)
+    log(f"  6 ext channels       : {wide.cycles} cycles — no gain: two "
+        "concurrent leaf sums need 6 input paths but the PE has only "
+        "2 shared b/c buses (paper §IV-A); the list scheduler proves "
+        "the bus is the structural bottleneck, not the channel count")
+    log(f"  paper's schedule     : {s.paper_pe_cycles_288} cycles")
+    log(f"  storage: fine-grained peak {compact.fine_peak_bits} bits "
+        f"(paper bound {storage_bound(n)}), register peak "
+        f"{compact.peak_storage_bits}/64 bits")
+    return {"pe_cycles": compact.cycles, "naive_cycles": naive.cycles,
+            "pdp_ratio": pdp_b / pdp_t, "area_ratio": s.mac_area_um2 / s.pe_area_um2}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Table III: AlexNet input-refetch requirements (P, Z, P*Z) for
+YodaNN vs TULIP — must match the paper's table exactly."""
+from repro.core.mapping import TULIP, YODANN, table3_rows
+from repro.core.workloads import alexnet_imagenet
+
+# the paper's Table III
+PAPER = [  # (parts, P_y, Z_y, P_t, Z_t)
+    ("conv1", 4, 1, 3, 1, 3),
+    ("conv2", 1, 2, 8, 2, 8),
+    ("conv3", 1, 4, 12, 8, 2),
+    ("conv4", 1, 6, 12, 12, 2),
+    ("conv5", 1, 6, 8, 12, 1),
+]
+
+
+def run(log=print):
+    wl = alexnet_imagenet()
+    rows = table3_rows(wl)
+    log("\n== Table III: AlexNet input-refetch (P, Z, P*Z) ==")
+    log(f"{'layer':8s} {'parts':>5s} | {'Yoda P':>6s} {'Z':>4s} {'P*Z':>5s}"
+        f" | {'TULIP P':>7s} {'Z':>4s} {'P*Z':>5s} | match")
+    ok_all = True
+    for row, (name, parts, py, zy, pt, zt) in zip(rows, PAPER):
+        match = (row["YodaNN_P"] == py and row["YodaNN_Z"] == zy
+                 and row["TULIP_P"] == pt and row["TULIP_Z"] == zt
+                 and row["parts"] == parts)
+        ok_all &= match
+        log(f"{row['layer']:8s} {row['parts']:5d} | {row['YodaNN_P']:6d} "
+            f"{row['YodaNN_Z']:4d} {row['YodaNN_PZ']:5d} | "
+            f"{row['TULIP_P']:7d} {row['TULIP_Z']:4d} {row['TULIP_PZ']:5d}"
+            f" | {'OK' if match else 'MISMATCH'}")
+    tot_y = sum(r["YodaNN_PZ"] for r in rows[2:])
+    tot_t = sum(r["TULIP_PZ"] for r in rows[2:])
+    log(f"binary-layer P*Z: YodaNN {tot_y} vs TULIP {tot_t} "
+        f"({tot_y / tot_t:.1f}x fewer refetches; paper: 3-4x)")
+    assert ok_all, "Table III mismatch vs paper"
+    return {"match": ok_all, "refetch_gain": tot_y / tot_t}
+
+
+if __name__ == "__main__":
+    run()

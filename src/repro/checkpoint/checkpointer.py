@@ -1,0 +1,152 @@
+"""Fault-tolerant checkpointing: atomic, async, integrity-checked,
+elastic-reshard-capable.
+
+Layout: <dir>/step_<k>/ containing arrays.npz (flattened pytree leaves),
+meta.json (tree structure, shapes, data-pipeline cursor, fingerprint).
+Writes go to a tmp dir + os.replace (atomic on POSIX); a save is only
+visible once complete, so a crash mid-save can never corrupt the latest
+restorable state.  `AsyncCheckpointer` moves serialization off the
+training thread.  Restore re-shards to whatever mesh the new job runs
+(device count may differ — elastic scaling), because arrays are saved
+fully replicated/gathered.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[np.ndarray], Any, List[str]]:
+    flat, treedef = jax.tree.flatten(tree)
+    arrs = [np.asarray(x) for x in flat]
+    names = [f"leaf_{i}" for i in range(len(arrs))]
+    return arrs, treedef, names
+
+
+def _fingerprint(arrs: List[np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for a in arrs:
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes()[:4096])   # prefix hash: cheap integrity check
+    return h.hexdigest()
+
+
+def save(directory: str, step: int, tree: Any,
+         extra: Optional[Dict[str, Any]] = None,
+         keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrs, treedef, names = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{n: a for n, a in zip(names, arrs)})
+    meta = {
+        "step": step,
+        "n_leaves": len(arrs),
+        "treedef": str(treedef),
+        "fingerprint": _fingerprint(arrs),
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _retention(directory, keep)
+    return final
+
+
+def _retention(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, Dict[str, Any]]:
+    """Load into `template`'s tree structure; verify integrity; place
+    onto `shardings` (NamedSharding tree) if given — this is the elastic
+    reshard path (the checkpoint is mesh-agnostic)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrs = [z[f"leaf_{i}"] for i in range(meta["n_leaves"])]
+    if _fingerprint(arrs) != meta["fingerprint"]:
+        raise IOError(f"checkpoint {path} failed integrity check")
+    flat_t, treedef = jax.tree.flatten(template)
+    assert len(flat_t) == len(arrs), \
+        f"leaf count mismatch: {len(flat_t)} vs {len(arrs)}"
+    out = []
+    for t, a in zip(flat_t, arrs):
+        assert tuple(np.shape(t)) == a.shape, \
+            f"shape mismatch {np.shape(t)} vs {a.shape}"
+        out.append(a.astype(np.asarray(t).dtype if hasattr(t, "dtype")
+                            else a.dtype))
+    tree = jax.tree.unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, meta
+
+
+class AsyncCheckpointer:
+    """Serialize + write on a background thread; at most one in flight
+    (training never blocks on I/O unless saves outpace the interval)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.saved_steps: List[int] = []
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Any,
+             extra: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        # materialize on host *before* returning control, so the trainer
+        # can donate/overwrite device buffers safely
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def run():
+            try:
+                save(self.directory, step, host, extra, keep=self.keep)
+                self.saved_steps.append(step)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()

@@ -1,0 +1,8 @@
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, TRAIN_4K,
+                                PREFILL_32K, DECODE_32K, LONG_500K, reduced,
+                                shape_applicable)
+from repro.configs.registry import ARCHS, get_arch, get_shape, all_cells
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
+           "DECODE_32K", "LONG_500K", "reduced", "shape_applicable",
+           "ARCHS", "get_arch", "get_shape", "all_cells"]

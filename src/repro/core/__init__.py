@@ -1,0 +1,12 @@
+"""TULIP core: the paper's contribution in executable form.
+
+ - threshold.py   threshold-gate algebra (paper §II)
+ - isa.py         TULIP-PE micro-op ISA (paper §IV-A, Fig 3)
+ - tulip_pe.py    cycle-accurate PE simulator (numpy + jax.lax.scan/vmap)
+ - schedules.py   add / accumulate / compare / maxpool / relu schedules
+ - adder_tree.py  popcount decomposition + RPO list scheduler (§III, §IV-B)
+ - energy.py      ASIC energy/area/latency model (Tables I, II, IV, V)
+ - mapping.py     BNN layer -> PE-array mapping + refetch model (Table III)
+ - binarize.py    sign/STE, bit packing (framework integration)
+ - bnn_layers.py  binarized layers with integer threshold folding
+"""

@@ -1,0 +1,104 @@
+"""Binarized layers with integer threshold folding (paper §IV-D).
+
+The paper folds batch normalization into the neuron threshold T: instead
+of computing BN(popcount_affine(x)) and taking its sign, the comparison
+constant of the sequential comparator is adjusted so that
+
+    sign(gamma * (s - mu) / sigma + beta)  ==  [s >= T_int]
+
+for the integer-valued popcount-sum s.  This is *exact* (both sides are
+step functions of the integer s), which `fold_bn_threshold` implements
+and tests verify bit-for-bit.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binarize import (binarize_weights, pack_bits, ste_sign,
+                                 unpack_bits, xnor_popcount_dot)
+
+
+class FoldedThreshold(NamedTuple):
+    """Integer thresholds T (one per channel) + sign flip for gamma < 0."""
+    T: jax.Array          # int32 [channels]
+    flip: jax.Array       # bool  [channels] (output inverted where gamma<0)
+
+
+def fold_bn_threshold(mu, sigma, gamma, beta, n_inputs: int,
+                      eps: float = 1e-5) -> FoldedThreshold:
+    """Fold BN(s) >= 0 into s >= T for integer popcount-dot s in
+    [-n, n] with parity of n (s = 2*popcount - n steps by 2).
+
+    BN(s) >= 0  <=>  gamma * (s - mu)/sqrt(sigma^2+eps) + beta >= 0
+      gamma > 0:  s >= mu - beta * sqrt(..)/gamma   -> T = ceil(rhs)
+      gamma < 0:  s <= rhs                          -> flip + T = floor+1
+    """
+    mu = jnp.asarray(mu, jnp.float32)
+    sd = jnp.sqrt(jnp.asarray(sigma, jnp.float32) ** 2 + eps)
+    gamma = jnp.asarray(gamma, jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32)
+    rhs = mu - beta * sd / jnp.where(gamma == 0, 1e-12, gamma)
+    pos = gamma > 0
+    # s takes values of parity n (mod 2); ceil to the next representable
+    T_pos = jnp.ceil(rhs).astype(jnp.int32)
+    T_neg = (jnp.floor(rhs) + 1).astype(jnp.int32)
+    T = jnp.where(pos, T_pos, T_neg)
+    return FoldedThreshold(T=T, flip=~pos)
+
+
+def apply_folded(s: jax.Array, fold: FoldedThreshold) -> jax.Array:
+    """[s >= T] with per-channel flip; returns +-1 activations."""
+    ge = s >= fold.T
+    out = jnp.where(fold.flip, ~ge, ge)
+    return jnp.where(out, 1.0, -1.0)
+
+
+def bn_reference(s, mu, sigma, gamma, beta, eps: float = 1e-5):
+    sd = jnp.sqrt(jnp.asarray(sigma, jnp.float32) ** 2 + eps)
+    return gamma * (s - mu) / sd + beta
+
+
+# ------------------------------------------------------------------ #
+# functional binarized dense layer                                     #
+# ------------------------------------------------------------------ #
+def bnn_dense_train(x, w, mu, sigma, gamma, beta,
+                    binarize_acts: bool = True, eps: float = 1e-5):
+    """Training path: STE sign, float BN, sign activation.
+    x: [..., K], w: [N, K] latent weights."""
+    xb = ste_sign(x) if binarize_acts else x
+    wb, alpha = binarize_weights(w, axis=1)
+    s = jnp.einsum("...k,nk->...n", xb, wb)
+    y = bn_reference(s * alpha[:, 0], mu, sigma, gamma, beta, eps)
+    return ste_sign(y)
+
+
+def bnn_dense_serve_folded(xp, wp, fold: FoldedThreshold, n: int):
+    """Inference path: packed XNOR-popcount + integer threshold.
+    xp: [..., K/32] uint32, wp: [N, K/32] uint32."""
+    s = xnor_popcount_dot(xp, wp, n)
+    return apply_folded(s, fold)
+
+
+def quantize_for_serving(w, mu, sigma, gamma, beta, eps: float = 1e-5):
+    """Convert a trained binarized layer to the integer serving form.
+
+    alpha (per-channel positive scale) passes through the sign, so the
+    fold absorbs it into BN's statistics: BN(alpha*s) >= 0 folds with
+    mu/alpha etc.  Returns (wp packed uint32 [N, K/32], fold)."""
+    n = w.shape[1]
+    pad = (-n) % 32
+    wb = jnp.where(w > 0, 1.0, -1.0)
+    alpha = jnp.mean(jnp.abs(w), axis=1)
+    if pad:
+        wb = jnp.pad(wb, ((0, 0), (0, pad)), constant_values=-1.0)
+    wp = pack_bits(wb, axis=1)
+    a = jnp.where(alpha == 0, 1e-12, alpha)
+    sd = jnp.sqrt(jnp.asarray(sigma, jnp.float32) ** 2 + eps)
+    fold = fold_bn_threshold(jnp.asarray(mu) / a, sd / a,
+                             gamma, beta, n, eps=0.0)
+    return wp, fold

@@ -1,0 +1,182 @@
+"""Cycle-accurate TULIP-PE simulator.
+
+Two interchangeable backends, tested against each other:
+
+  * ``run_numpy``  — batched numpy interpreter (reference semantics).
+  * ``run_jax``    — ``jax.lax.scan`` over packed micro-ops; ``vmap`` over
+    the batch axis reproduces the paper's SIMD organization (one program
+    broadcast to all PEs, each PE on its own data — §IV-E: "The control
+    signals are broadcast to all the processing units").
+
+Cycle semantics (see isa.py for the structural model):
+  1. registers are read as of cycle start; writes land at end of cycle;
+  2. neuron-output reads default to the *previous* cycle's latched value
+     (edge-triggered flip-flop, paper §II); ``fresh`` reads see the value
+     computed this cycle by an earlier-`stage` neuron (the paper's
+     "cascade of two binary neurons" full adder);
+  3. thr == 0 (HOLD) keeps the output latch unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.isa import (EXT_BASE, NEURON_BASE, N_NEURONS, N_REG_BITS,
+                            REG_BASE, Program)
+
+MAX_STAGES = 4
+
+
+# --------------------------------------------------------------------- #
+# numpy reference interpreter                                            #
+# --------------------------------------------------------------------- #
+def run_numpy(program: Program, ext: np.ndarray,
+              init_regs: Optional[np.ndarray] = None,
+              trace: bool = False):
+    """Execute `program` on a batch of PEs.
+
+    ext:  [batch, T, n_ext] int/bool external input bits.
+    returns (regs [batch,4,16], outs [batch,4], trace [batch,T,4] or None)
+    """
+    p = program.pack()
+    ext = np.asarray(ext, dtype=np.int32)
+    assert ext.ndim == 3 and ext.shape[1] >= len(program), \
+        f"ext {ext.shape} too short for {len(program)} cycles"
+    B = ext.shape[0]
+    regs = (np.zeros((B, N_NEURONS, N_REG_BITS), np.int32)
+            if init_regs is None else np.asarray(init_regs, np.int32).copy())
+    prev = np.zeros((B, N_NEURONS), np.int32)
+    hist = np.zeros((B, len(program), N_NEURONS), np.int32) if trace else None
+
+    for t in range(len(program)):
+        cur = prev.copy()
+        order = np.argsort(p["stage"][t], kind="stable")
+        for n in order:
+            vals = []
+            # ports a, d
+            for j in (0, 1):
+                code = p["sel"][t, n, j]
+                v = _resolve_np(code, p["sel_fresh"][t, n, j], cur, prev,
+                                ext[:, t], regs[:, n])
+                vals.append(v ^ p["sel_inv"][t, n, j])
+            # ports b, c from shared buses
+            for j in (0, 1):
+                if p["bc_en"][t, n, j]:
+                    code = p["bus_src"][t, j]
+                    v = _resolve_np(code, p["bus_fresh"][t, j], cur, prev,
+                                    ext[:, t], regs[:, n])
+                    v = v ^ p["bus_inv"][t, j] ^ p["bc_inv"][t, n, j]
+                else:
+                    v = np.zeros(B, np.int32)
+                vals.append(v)
+            a, d, b, c = vals
+            thr = p["thr"][t, n]
+            if thr > 0:
+                cur[:, n] = (2 * a + b + c + d >= thr).astype(np.int32)
+            # thr == 0: hold (cur already = prev)
+        for n in range(N_NEURONS):
+            if p["wr_en"][t, n]:
+                regs[:, n, p["wr_bit"][t, n]] = cur[:, n]
+        prev = cur
+        if trace:
+            hist[:, t] = cur
+    return regs, prev, hist
+
+
+def _resolve_np(code: int, fresh: int, cur, prev, ext_t, my_regs):
+    B = cur.shape[0]
+    if code == 0:
+        return np.zeros(B, np.int32)
+    if code == 1:
+        return np.ones(B, np.int32)
+    if code < EXT_BASE:
+        k = code - NEURON_BASE
+        return (cur if fresh else prev)[:, k]
+    if code < REG_BASE:
+        return ext_t[:, code - EXT_BASE]
+    return my_regs[:, code - REG_BASE]
+
+
+# --------------------------------------------------------------------- #
+# JAX scan interpreter (SIMD over PEs via vmap)                           #
+# --------------------------------------------------------------------- #
+def _resolve_jax(code, fresh, inv, cur, prev, ext_t, my_regs):
+    """code/fresh/inv: scalars (traced); value tables are vectors."""
+    nidx = jnp.clip(code - NEURON_BASE, 0, N_NEURONS - 1)
+    nval = jnp.where(fresh, cur[nidx], prev[nidx])
+    eidx = jnp.clip(code - EXT_BASE, 0, ext_t.shape[0] - 1)
+    ridx = jnp.clip(code - REG_BASE, 0, N_REG_BITS - 1)
+    v = jnp.where(code == 0, 0,
+        jnp.where(code == 1, 1,
+        jnp.where(code < EXT_BASE, nval,
+        jnp.where(code < REG_BASE, ext_t[eidx], my_regs[ridx]))))
+    return v ^ inv
+
+
+def _step(carry, op, n_ext):
+    regs, prev = carry
+    ext_t = op["ext"]
+
+    cur = prev
+    for s in range(MAX_STAGES):
+        new = []
+        for n in range(N_NEURONS):
+            va = _resolve_jax(op["sel"][n, 0], op["sel_fresh"][n, 0],
+                              op["sel_inv"][n, 0], cur, prev, ext_t, regs[n])
+            vd = _resolve_jax(op["sel"][n, 1], op["sel_fresh"][n, 1],
+                              op["sel_inv"][n, 1], cur, prev, ext_t, regs[n])
+            vb = _resolve_jax(op["bus_src"][0], op["bus_fresh"][0],
+                              op["bus_inv"][0] ^ op["bc_inv"][n, 0],
+                              cur, prev, ext_t, regs[n]) * op["bc_en"][n, 0]
+            vc = _resolve_jax(op["bus_src"][1], op["bus_fresh"][1],
+                              op["bus_inv"][1] ^ op["bc_inv"][n, 1],
+                              cur, prev, ext_t, regs[n]) * op["bc_en"][n, 1]
+            fire = (2 * va + vb + vc + vd >= op["thr"][n]).astype(jnp.int32)
+            val = jnp.where(op["thr"][n] > 0, fire, prev[n])
+            # only update at this neuron's stage
+            new.append(jnp.where(op["stage"][n] == s, val, cur[n]))
+        cur = jnp.stack(new)
+    wr = op["wr_en"][:, None] * jax.nn.one_hot(
+        op["wr_bit"], N_REG_BITS, dtype=jnp.int32)
+    regs = regs * (1 - wr) + wr * cur[:, None]
+    return (regs, cur), cur
+
+
+def run_jax(program: Program, ext, init_regs=None, unroll: int = 1):
+    """ext: [batch, T, n_ext].  Returns (regs, outs, trace)."""
+    packed = program.pack()
+    T = len(program)
+    ops = {k: jnp.asarray(v[:T]) for k, v in packed.items()}
+    ext = jnp.asarray(ext, jnp.int32)[:, :T, :]
+
+    def one_pe(ext_pe, regs0):
+        seq = dict(ops, ext=ext_pe)
+        (regs, outs), hist = jax.lax.scan(
+            lambda c, o: _step(c, o, program.n_ext),
+            (regs0, jnp.zeros((N_NEURONS,), jnp.int32)), seq, unroll=unroll)
+        return regs, outs, hist
+
+    B = ext.shape[0]
+    regs0 = (jnp.zeros((B, N_NEURONS, N_REG_BITS), jnp.int32)
+             if init_regs is None else jnp.asarray(init_regs, jnp.int32))
+    return jax.vmap(one_pe)(ext, regs0)
+
+
+def read_value(regs: np.ndarray, neuron: int, bits) -> np.ndarray:
+    """Decode an unsigned integer stored little-endian in a register."""
+    regs = np.asarray(regs)
+    acc = np.zeros(regs.shape[0], dtype=np.int64)
+    for i, b in enumerate(bits):
+        acc += regs[:, neuron, b].astype(np.int64) << i
+    return acc
+
+
+def write_value(regs: np.ndarray, neuron: int, bits, values) -> None:
+    """Preload an integer into register bits (batched, in place)."""
+    values = np.asarray(values, dtype=np.int64)
+    for i, b in enumerate(bits):
+        regs[:, neuron, b] = (values >> i) & 1

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, DataIterator, global_batch_at,
+                                 shard_batch_at)
+
+__all__ = ["DataConfig", "DataIterator", "global_batch_at", "shard_batch_at"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: binarized GEMM.
+
+  xnor_gemm.py      packed weights -> unpack-in-VMEM -> MXU dot
+  popcount_gemm.py  both operands packed -> VPU SWAR-popcount adder tree
+  pack.py           sign + bit-pack activations
+  ops.py            jit wrappers (pallas | interpret | xla dispatch)
+  ref.py            pure-jnp oracles (the allclose targets)
+"""
+from repro.kernels.ops import (binarize_pack, binary_binary_dense,
+                               binary_dense, default_backend)
+
+__all__ = ["binarize_pack", "binary_binary_dense", "binary_dense",
+           "default_backend"]

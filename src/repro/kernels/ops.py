@@ -1,0 +1,84 @@
+"""Jit'd public wrappers for the binarized-compute kernels.
+
+Dispatch policy (`backend`):
+  "pallas"     real TPU lowering (pl.pallas_call, compiled)
+  "interpret"  Pallas interpret mode — kernel body runs on CPU; used by
+               the test suite for bit-exact validation vs ref.py
+  "xla"        pure-jnp fallback (ref.py) — used on hosts without Pallas
+Default: pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.pack import pack as _pack_kernel
+from repro.kernels.popcount_gemm import popcount_gemm as _pop_kernel
+from repro.kernels.xnor_gemm import xnor_gemm as _xnor_kernel
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pad_to(x, m, axis):
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x, 0
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, r)
+    return jnp.pad(x, pads), r
+
+
+def binary_dense(x: jax.Array, wp: jax.Array, alpha: jax.Array,
+                 threshold: Optional[float] = None,
+                 backend: Optional[str] = None) -> jax.Array:
+    """Binary-weight dense layer: [.., K] x packed [K/32, N] -> [.., N]."""
+    backend = backend or default_backend()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if backend == "xla":
+        y = ref.xnor_gemm_ref(x2, wp, alpha, threshold).astype(x.dtype)
+    else:
+        x2p, pm = _pad_to(x2, 128, 0)
+        y = _xnor_kernel(x2p, wp, alpha, threshold=threshold,
+                         interpret=(backend == "interpret"))
+        if pm:
+            y = y[:x2.shape[0]]
+    return y.reshape(*lead, -1)
+
+
+def binary_binary_dense(xp: jax.Array, wp: jax.Array, k: int,
+                        threshold: Optional[int] = None,
+                        backend: Optional[str] = None) -> jax.Array:
+    """Fully-binary dense: packed acts x packed weights -> int32 dot."""
+    backend = backend or default_backend()
+    lead = xp.shape[:-1]
+    x2 = xp.reshape(-1, xp.shape[-1])
+    if backend == "xla":
+        y = ref.popcount_gemm_ref(x2, wp, k)
+    else:
+        x2p, pm = _pad_to(x2, 128, 0)
+        y = _pop_kernel(x2p, wp, k, threshold=threshold,
+                        interpret=(backend == "interpret"))
+        if pm:
+            y = y[:x2.shape[0]]
+        return y.reshape(*lead, -1)
+    if threshold is not None:
+        y = jnp.where(y >= threshold, 1, -1)
+    return y.reshape(*lead, -1)
+
+
+def binarize_pack(x: jax.Array, backend: Optional[str] = None) -> jax.Array:
+    """sign+pack along the last axis."""
+    backend = backend or default_backend()
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if backend == "xla":
+        y = ref.pack_ref(x2)
+    else:
+        y = _pack_kernel(x2, interpret=(backend == "interpret"))
+    return y.reshape(*lead, -1)

@@ -1,0 +1,40 @@
+"""Pallas TPU kernel: binarize + bit-pack activations.
+
+sign(x) packed 32-per-uint32 along the last axis — the producer side of
+popcount_gemm.  Grid (M/bm, K/bk); each block reduces 32 consecutive
+lanes into one packed word via shift-or.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, out_ref):
+    x = x_ref[...]                                   # [bm, bk]
+    bm, bk = x.shape
+    bits = (x > 0).astype(jnp.uint32).reshape(bm, bk // 32, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    out_ref[...] = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def pack(x: jax.Array, bm: int = 256, bk: int = 1024,
+         interpret: bool = False) -> jax.Array:
+    """x: [M, K] (K % 32 == 0) -> uint32 [M, K//32]."""
+    M, K = x.shape
+    assert K % 32 == 0
+    bm, bk = min(bm, M), min(bk, K)
+    assert M % bm == 0 and K % bk == 0 and bk % 32 == 0
+    grid = (M // bm, K // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bk // 32), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K // 32), jnp.uint32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import (pack_bits, popcount_u32, unpack_bits)
+
+
+def xnor_gemm_ref(x: jax.Array, wp: jax.Array, alpha: jax.Array,
+                  threshold=None) -> jax.Array:
+    """x: [M,K] float; wp: [K/32, N] uint32 packed over K; alpha: [N].
+
+    y = (x @ unpack(wp)) * alpha, optionally sign(y - threshold)."""
+    w = unpack_bits(wp, axis=0, dtype=jnp.float32)      # [K, N] +-1
+    y = x.astype(jnp.float32) @ w * alpha.astype(jnp.float32)
+    if threshold is not None:
+        y = jnp.where(y >= threshold, 1.0, -1.0)
+    return y
+
+
+def popcount_gemm_ref(xp: jax.Array, wp: jax.Array, k: int) -> jax.Array:
+    """xp: [M, K/32], wp: [N, K/32] uint32.  Returns int32 [M, N] =
+    sum over valid K bits of sign_x * sign_w (pad bits are 0 on both
+    sides and cancel via the closed form)."""
+    xnor = ~(xp[:, None, :] ^ wp[None, :, :])
+    pc = popcount_u32(xnor).sum(axis=-1)
+    k_packed = 32 * xp.shape[-1]
+    return 2 * (pc - (k_packed - k)) - k
+
+
+def pack_ref(x: jax.Array) -> jax.Array:
+    """x: [M, K] (K % 32 == 0) -> [M, K/32] uint32."""
+    return pack_bits(x, axis=-1)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: binarized GEMM with bit-packed weights.
+
+The TULIP insight on TPU: binary-weight layers are HBM-bandwidth bound
+at decode, so weights travel packed (32 per uint32, 16x less traffic
+than bf16).  The MXU eats +-1 matmuls at full rate, so the kernel
+unpacks each weight tile to +-1 bf16 *in VMEM/VREGs* and feeds the MXU
+— the paper's XNOR+popcount becomes unpack+dot via the identity
+dot = 2*popcount(xnor) - K.
+
+Grid (M/bm, N/bn, K/bk); fp32 VMEM accumulator; optional fused epilogue
+applying the per-channel scale alpha and a threshold->sign (the paper's
+batch-norm-folded-into-T trick, §IV-D).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wp_ref, alpha_ref, out_ref, acc_ref, *,
+            n_k_blocks: int, threshold: Optional[float], out_dtype):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                   # [bm, bk]
+    wp = wp_ref[...]                                 # [bk//32, bn] uint32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, 1), 1)
+    bits = (wp[:, None, :] >> shifts) & jnp.uint32(1)
+    w = (2.0 * bits.astype(jnp.float32) - 1.0).astype(x.dtype)
+    w = w.reshape(wp.shape[0] * 32, wp.shape[1])     # [bk, bn] +-1
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k_blocks - 1)
+    def _done():
+        y = acc_ref[...] * alpha_ref[...].astype(jnp.float32)
+        if threshold is not None:
+            y = jnp.where(y >= threshold, 1.0, -1.0)
+        out_ref[...] = y.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "threshold",
+                                             "interpret"))
+def xnor_gemm(x: jax.Array, wp: jax.Array, alpha: jax.Array,
+              threshold: Optional[float] = None,
+              bm: int = 128, bn: int = 128, bk: int = 512,
+              interpret: bool = False) -> jax.Array:
+    """x: [M, K] bf16/f32; wp: [K//32, N] uint32; alpha: [N].
+    Returns [M, N] in x.dtype (fp32 accumulation)."""
+    M, K = x.shape
+    K32, N = wp.shape
+    assert K == K32 * 32, f"K {K} vs packed {K32 * 32}"
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0 and bk % 32 == 0
+
+    grid = (M // bm, N // bn, K // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k_blocks=grid[2], threshold=threshold,
+                          out_dtype=x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // 32, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, wp, alpha.reshape(1, N))
+    return out

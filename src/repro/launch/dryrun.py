@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, abstract parameters and
+inputs (ShapeDtypeStruct — no allocation), jits the right step function
+with the framework's sharding rules, and runs .lower().compile().
+Success proves the distribution config is coherent; the compiled
+artifact yields memory_analysis / cost_analysis / the collective
+schedule for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k \
+      --mesh single --variant baseline --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, get_arch, get_shape,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.quantize import pack_model_params
+from repro.optim import adamw
+from repro.runtime import sharding as shd
+
+# dtype sizes for parsing HLO shapes
+_DT = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+       "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+       "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\b")
+_SHAPE = re.compile(r"\b(" + "|".join(_DT) + r")\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in the (post-SPMD,
+    per-device) HLO module."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL.search(line)
+        if not m or "= " not in line:
+            continue
+        kind = m.group(1)
+        # operand shapes = every TYPE[dims] after the op name; the first
+        # TYPE[dims] on the line is the result
+        shapes = _SHAPE.findall(line)
+        if not shapes:
+            continue
+        opnd = shapes[1:] or shapes[:1]
+        nbytes = 0
+        for dt, dims in opnd:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DT[dt]
+        out[kind] = out.get(kind, 0.0) + float(nbytes)
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    return out
+
+
+def _train_step_fn(cfg, opt_cfg):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch))(params)
+        params, opt_state, metrics = adamw.apply_updates(
+            params, opt_state, grads, opt_cfg)
+        return params, opt_state, dict(metrics, loss=loss)
+    return step
+
+
+def build_cell(arch: str, shape_name: str, mesh, variant: str = "baseline"):
+    """Returns (jitted_fn, example_args_abstract)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    if shape.kind == "train" and cfg.padded_vocab() >= 65536:
+        cfg = cfg.replace(logits_chunk=8192)
+    if shape.kind == "train":
+        # full per-layer remat is the production default at this scale;
+        # variants re-open the compute/memory trade for the hillclimb
+        remat = {"remat_none": "none", "remat_dots": "dots"}.get(
+            variant, "full")
+        cfg = cfg.replace(remat=remat)
+    if variant == "packed":
+        cfg = cfg.replace(pack_weights=True)
+    if variant == "moe_capacity":
+        cfg = cfg.replace(moe_impl="capacity")
+    if variant == "moe_gather":
+        cfg = cfg.replace(moe_impl="gather")
+    if variant in ("kv_int8", "tp_only_packed_kv8"):
+        cfg = cfg.replace(kv_cache_dtype="int8")
+    if variant == "big_chunks":
+        cfg = cfg.replace(attn_q_chunk=2048, attn_kv_chunk=4096)
+    if variant == "remat_dots_big_chunks":
+        cfg = cfg.replace(attn_q_chunk=2048, attn_kv_chunk=4096,
+                          remat="dots")
+    if variant == "packed_moe_capacity":
+        cfg = cfg.replace(pack_weights=True, moe_impl="capacity")
+
+    params_abs = M.abstract_params(cfg)
+    if variant.startswith("packed") or variant.endswith("packed"):
+        params_abs = jax.eval_shape(pack_model_params, params_abs)
+    # serving wants TP-stationary weights (no per-step FSDP re-gather)
+    fsdp_axis = "__off__" if variant.startswith("tp_only") else "data"
+    if variant == "tp_only_packed_kv8":
+        params_abs = jax.eval_shape(pack_model_params, M.abstract_params(
+            cfg))
+    specs = shd.param_specs(params_abs, mesh,
+                            stacked_prefixes=("decoder", "encoder"),
+                            fsdp_axis=fsdp_axis)
+    p_shard = shd.named(specs, mesh)
+    inputs = M.input_specs(cfg, shape)
+    b_specs = shd.named(shd.batch_specs(inputs, mesh), mesh)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        o_specs = shd.named(
+            adamw.OptState(step=jax.sharding.PartitionSpec(),
+                           m=specs, v=specs), mesh)
+        fn = jax.jit(
+            _train_step_fn(cfg, opt_cfg),
+            in_shardings=(p_shard, o_specs, b_specs),
+            out_shardings=(p_shard, o_specs, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_abs, opt_abs, inputs)
+    elif shape.kind == "prefill":
+        fn = jax.jit(
+            lambda params, batch: M.prefill(params, cfg, batch,
+                                            cache_capacity=shape.seq_len),
+            in_shardings=(p_shard, b_specs),
+            out_shardings=None,
+        )
+        args = (params_abs, inputs)
+    else:  # decode
+        fn = jax.jit(
+            lambda params, batch: M.decode_step(params, cfg, batch),
+            in_shardings=(p_shard, b_specs),
+            out_shardings=(None, shd.named(
+                shd.batch_specs(inputs, mesh), mesh)["caches"]),
+            donate_argnums=(1,),
+        )
+        args = (params_abs, inputs)
+    return cfg, fn, args
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: str = "baseline") -> Dict[str, Any]:
+    cfg0 = get_arch(arch)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg0, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "applicable": ok,
+    }
+    if not ok:
+        rec["skip_reason"] = why
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        with mesh:
+            cfg, fn, args = build_cell(arch, shape_name, mesh, variant)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            try:
+                mem = compiled.memory_analysis()
+                rec["memory"] = {
+                    k: getattr(mem, k) for k in
+                    ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes")
+                    if hasattr(mem, k)}
+            except Exception as e:  # CPU backend may lack this
+                rec["memory"] = {"error": str(e)}
+            try:
+                ca = compiled.cost_analysis()
+                rec["cost"] = {k: float(v) for k, v in ca.items()
+                               if isinstance(v, (int, float))
+                               and k in ("flops", "bytes accessed",
+                                         "optimal_seconds", "utilization")}
+                rec["cost"]["flops"] = float(ca.get("flops", 0.0))
+                rec["cost"]["bytes_accessed"] = float(
+                    ca.get("bytes accessed", 0.0))
+            except Exception as e:
+                rec["cost"] = {"error": str(e)}
+            hlo_text = compiled.as_text()
+            rec["collectives_static"] = collective_bytes(hlo_text)
+            # loop-aware analysis (XLA cost_analysis counts while bodies
+            # once; repro.runtime.hlo_cost scales by trip counts)
+            from repro.runtime.hlo_cost import analyze
+            cost2 = analyze(hlo_text)
+            rec["cost2"] = {"flops": cost2.flops, "bytes": cost2.bytes,
+                            "collectives": dict(cost2.collectives),
+                            "collective_bytes": cost2.collective_bytes}
+            rec["collectives"] = dict(cost2.collectives,
+                                      total=cost2.collective_bytes)
+            rec["n_params"] = cfg.param_count()
+            rec["n_params_active"] = cfg.param_count(active_only=True)
+            rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = time.time() - t0
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in sorted(SHAPES):
+                for mk in meshes:
+                    cells.append((a, s, mk))
+    else:
+        assert args.arch and args.shape
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s, mk in cells:
+        rec = run_cell(a, s, mk, args.variant)
+        name = f"{a}__{s}__{mk}__{args.variant}.json"
+        with open(os.path.join(args.out, name), "w") as f:
+            json.dump(rec, f, indent=1)
+        status = ("SKIP" if not rec.get("applicable")
+                  else "OK" if rec.get("ok") else "FAIL")
+        print(f"[{status}] {a} x {s} x {mk} ({rec.get('wall_s', 0):.1f}s)"
+              + (f" :: {rec.get('error', '')}" if status == "FAIL" else ""),
+              flush=True)
+        if status == "FAIL":
+            failures += 1
+        jax.clear_caches()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.model import (abstract_params, decode_step, forward,
+                                init_caches, init_params, input_specs,
+                                loss_fn, prefill)
+
+__all__ = ["abstract_params", "decode_step", "forward", "init_caches",
+           "init_params", "input_specs", "loss_fn", "prefill"]

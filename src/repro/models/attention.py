@@ -1,0 +1,315 @@
+"""Attention: GQA/MQA/MHA, causal + sliding-window/local + cross,
+chunked (flash-style) online-softmax for long sequences, ring-buffer KV
+caches for bounded-window decode, and binarized projections.
+
+Cache layout: {"k","v": [B, W, Hkv, D], "pos": [B, W] int32} where W is
+the cache capacity (full seq for dense attention, the window for
+SWA/local).  pos < 0 marks empty slots; ring indexing is pos % W.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, dense, dense_init, dtype_of,
+                                 wparams)
+from repro.runtime.sharding import shard_act
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, cross: bool = False) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim_()
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dt)["w"],
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dt)["w"],
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dt)["w"],
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d, dt)["w"],
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+    if cfg.attn_bias:
+        p["bo"] = jnp.zeros((d,), dt)
+    return p
+
+
+def make_cache(cfg, batch: int, capacity: int,
+               dtype=None) -> Dict[str, jax.Array]:
+    hkv, hd = max(cfg.num_kv_heads, 1), cfg.head_dim_()
+    if cfg.kv_cache_dtype == "int8":
+        # quantized cache: int8 payload + per (token, head) scales —
+        # halves decode HBM traffic vs bf16 (the §Perf "next lever")
+        return {
+            "k": jnp.zeros((batch, capacity, hkv, hd), jnp.int8),
+            "v": jnp.zeros((batch, capacity, hkv, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, capacity, hkv), jnp.float32),
+            "v_scale": jnp.zeros((batch, capacity, hkv), jnp.float32),
+            "pos": jnp.full((batch, capacity), -1, jnp.int32),
+        }
+    dt = dtype or dtype_of(cfg)
+    return {
+        "k": jnp.zeros((batch, capacity, hkv, hd), dt),
+        "v": jnp.zeros((batch, capacity, hkv, hd), dt),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def _kv_quant(x):
+    """[..., H, D] -> (int8, scale[..., H]) with per-head max-abs."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    for c in range(min(target, s), 0, -1):
+        if s % c == 0:
+            return c
+    return s
+
+
+def _proj_qkv(p, x, cfg, mode):
+    hd = cfg.head_dim_()
+    q = dense(wparams(p, "wq", "bq"), x, mode)
+    k = dense(wparams(p, "wk", "bk"), x, mode)
+    v = dense(wparams(p, "wv", "bv"), x, mode)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _group(q, n_kv):
+    """[B,S,Hq,D] -> [B,S,Hkv,G,D]"""
+    B, S, Hq, D = q.shape
+    return q.reshape(B, S, n_kv, Hq // n_kv, D)
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
+                      window: int, q_chunk: int = 512,
+                      kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention over chunks (memory-bounded prefill).
+
+    q: [B,Sq,Hkv,G,D]; k,v: [B,Skv,Hkv,D]; positions: [Sq]/[Skv] int32.
+    window <= 0 means unlimited.
+    """
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Skv, kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / math.sqrt(D)
+
+    qs = q.reshape(B, nq, qc, Hkv, G, D)
+    qp = q_positions.reshape(nq, qc)
+    ks = k.reshape(B, nk, kc, Hkv, D)
+    vs = v.reshape(B, nk, kc, Hkv, D)
+    kp = kv_positions.reshape(nk, kc)
+
+    @jax.checkpoint
+    def q_body_inner(qi, qpos):
+        # rematerialized in backward (flash-attention memory behavior:
+        # nothing quadratic survives to the bwd pass)
+
+        def kv_body(carry, kj_vj_kpos):
+            m, l, acc = carry
+            kj, vj, kpos = kj_vj_kpos
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            mask &= (kpos >= 0)[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, qc, Hkv, G), -jnp.inf, jnp.float32),
+                jnp.zeros((B, qc, Hkv, G), jnp.float32),
+                jnp.zeros((B, qc, Hkv, G, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, init,
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    def q_body(_, qi_qpos):
+        return None, q_body_inner(*qi_qpos)
+
+    _, out = jax.lax.scan(q_body, None,
+                          (jnp.moveaxis(qs, 1, 0), qp))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hkv, G, D)
+    return out
+
+
+def decode_attention(q, cache, step) -> jax.Array:
+    """Single-token attention over the cache.
+
+    q: [B,1,Hkv,G,D]; returns [B,1,Hkv,G,D].  Works for full caches and
+    ring buffers alike — slot validity comes from cache["pos"].
+    """
+    k, v, pos = cache["k"], cache["v"], cache["pos"]
+    if k.dtype == jnp.int8:
+        k = _kv_dequant(k, cache["k_scale"], q.dtype)
+        v = _kv_dequant(v, cache["v_scale"], q.dtype)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= step[:, None])
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def cache_insert(cache, k_new, v_new, step):
+    """Insert one token's K/V at ring position step % W."""
+    W = cache["k"].shape[1]
+    idx = step % W                                      # [B]
+    b = jnp.arange(k_new.shape[0])
+    cache = dict(cache)
+    if cache["k"].dtype == jnp.int8:
+        kq, ks = _kv_quant(k_new[:, 0])
+        vq, vs = _kv_quant(v_new[:, 0])
+        cache["k"] = cache["k"].at[b, idx].set(kq)
+        cache["v"] = cache["v"].at[b, idx].set(vq)
+        cache["k_scale"] = cache["k_scale"].at[b, idx].set(ks)
+        cache["v_scale"] = cache["v_scale"].at[b, idx].set(vs)
+    else:
+        cache["k"] = cache["k"].at[b, idx].set(k_new[:, 0])
+        cache["v"] = cache["v"].at[b, idx].set(v_new[:, 0])
+    cache["pos"] = cache["pos"].at[b, idx].set(step)
+    return cache
+
+
+def fill_cache_from_prefill(cfg, k, v, positions, capacity: int):
+    """Build a decode cache from prefill K/V (keep the last `capacity`).
+
+    Ring invariant: the entry for position p sits at slot p % capacity."""
+    B, S = k.shape[:2]
+    cache = make_cache(cfg, B, capacity, k.dtype)
+    quant = cache["k"].dtype == jnp.int8
+    if quant:
+        k, ks = _kv_quant(k)
+        v, vs = _kv_quant(v)
+    if S >= capacity:
+        k_keep, v_keep = k[:, -capacity:], v[:, -capacity:]
+        pos_keep = jnp.broadcast_to(positions[-capacity:], (B, capacity))
+        slots = pos_keep % capacity
+        b = jnp.arange(B)[:, None]
+        cache["k"] = cache["k"].at[b, slots].set(k_keep)
+        cache["v"] = cache["v"].at[b, slots].set(v_keep)
+        if quant:
+            cache["k_scale"] = cache["k_scale"].at[b, slots].set(
+                ks[:, -capacity:])
+            cache["v_scale"] = cache["v_scale"].at[b, slots].set(
+                vs[:, -capacity:])
+        cache["pos"] = cache["pos"].at[b, slots].set(pos_keep)
+    else:
+        # positions 0..S-1 map to slots 0..S-1; the rest stays empty
+        cache["k"] = cache["k"].at[:, :S].set(k)
+        cache["v"] = cache["v"].at[:, :S].set(v)
+        if quant:
+            cache["k_scale"] = cache["k_scale"].at[:, :S].set(ks)
+            cache["v_scale"] = cache["v_scale"].at[:, :S].set(vs)
+        cache["pos"] = cache["pos"].at[:, :S].set(
+            jnp.broadcast_to(positions, (B, S)))
+    return cache
+
+
+def attn_apply(p, x, cfg, *, kind: str = "causal",
+               positions: Optional[jax.Array] = None,
+               cache: Optional[Dict] = None,
+               step: Optional[jax.Array] = None,
+               kv_ext: Optional[Tuple[jax.Array, jax.Array]] = None,
+               window: int = 0,
+               build_cache_capacity: int = 0):
+    """Unified attention entry point.
+
+    kind: "causal" (self), "local" (bounded window self), "cross"
+    (keys/values from kv_ext, e.g. encoder output or image tokens).
+    Returns (y, new_cache_or_None).
+    """
+    mode = cfg.binarize if cfg.binarize_attn_proj else "none"
+    B, S = x.shape[:2]
+    hd = cfg.head_dim_()
+    decode = cache is not None and S == 1
+    new_cache = None
+
+    if kind == "cross":
+        q = dense(wparams(p, "wq", "bq"), x, mode).reshape(
+            B, S, cfg.num_heads, hd)
+        if kv_ext is not None:
+            ctx_k, ctx_v = kv_ext
+            k = dense(wparams(p, "wk", "bk"), ctx_k, mode).reshape(
+                B, -1, cfg.num_kv_heads, hd)
+            v = dense(wparams(p, "wv", "bv"), ctx_v, mode).reshape(
+                B, -1, cfg.num_kv_heads, hd)
+        else:  # decode: static cross cache
+            k, v = cache["k"], cache["v"]
+        qg = _group(q, cfg.num_kv_heads)
+        kvp = jnp.arange(k.shape[1], dtype=jnp.int32)
+        qp = positions if positions is not None \
+            else jnp.arange(S, dtype=jnp.int32)
+        out = chunked_attention(qg, k, v, q_positions=qp, kv_positions=kvp,
+                                causal=False, window=0)
+        if kv_ext is not None and cache is None and build_cache_capacity:
+            new_cache = {"k": k, "v": v,
+                         "pos": jnp.broadcast_to(kvp, (B, k.shape[1]))}
+    else:
+        q, k, v = _proj_qkv(p, x, cfg, mode)
+        if decode:
+            qp = step
+        else:
+            qp = positions if positions is not None \
+                else jnp.arange(S, dtype=jnp.int32)
+        if cfg.use_rope:
+            if decode:
+                q = apply_rope(q, step[:, None], cfg.rope_theta)
+                k = apply_rope(k, step[:, None], cfg.rope_theta)
+            else:
+                q = apply_rope(q, qp, cfg.rope_theta)
+                k = apply_rope(k, qp, cfg.rope_theta)
+        qg = _group(q, cfg.num_kv_heads)
+        qg = shard_act(qg, (("pod", "data"), None, "model", None, None))
+        if decode:
+            cache = cache_insert(cache, k, v, step)
+            out = decode_attention(qg, cache, step)
+            new_cache = cache
+        else:
+            out = chunked_attention(qg, k, v, q_positions=qp,
+                                    kv_positions=qp,
+                                    causal=(kind != "full"),
+                                    window=window,
+                                    q_chunk=cfg.attn_q_chunk,
+                                    kv_chunk=cfg.attn_kv_chunk)
+            if build_cache_capacity:
+                new_cache = fill_cache_from_prefill(
+                    cfg, k, v, qp, build_cache_capacity)
+
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    y = dense(wparams(p, "wo", "bo"), out, mode)
+    return y, new_cache

@@ -1,0 +1,238 @@
+"""Shared model layers: norms, rotary embedding, binarized dense, MLP.
+
+The paper's technique is integrated here as `dense()` — every linear
+projection in every architecture routes through it and supports:
+
+  mode "none"          conventional bf16 matmul (the MAC/YodaNN path)
+  mode "weights"       latent weights, sign+scale at use (STE training;
+                       XNOR-Net w ~ alpha*sign(w))
+  mode "weights+acts"  + sign() on activations (full BNN)
+
+and two serving-time weight layouts:
+  dense bf16 [K, N]                    (paper-faithful baseline)
+  packed uint32 [K/32, N] + alpha[N]   (TULIP path: 16x less HBM traffic;
+                                        unpacked in-register, MXU matmul —
+                                        see DESIGN.md hardware adaptation)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import ste_sign, unpack_bits
+from repro.runtime.sharding import shard_act
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ #
+# init helpers                                                         #
+# ------------------------------------------------------------------ #
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: Optional[float] = None) -> Dict[str, jax.Array]:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def pack_dense_params(p: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Offline transform: latent weights -> packed serving layout."""
+    from repro.core.binarize import pack_bits
+    w = p["w"]
+    k = w.shape[0]
+    assert k % 32 == 0, "pack path requires K % 32 == 0"
+    alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0)
+    out = {"wp": pack_bits(jnp.where(w > 0, 1.0, -1.0), axis=0),
+           "alpha": alpha.astype(w.dtype)}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def wparams(p: Dict[str, jax.Array], name: str,
+            bias: Optional[str] = None) -> Dict[str, jax.Array]:
+    """Select the dense or packed layout for weight `name` in p."""
+    if name + "_p" in p:
+        d = {"wp": p[name + "_p"], "alpha": p[name + "_alpha"]}
+    else:
+        d = {"w": p[name]}
+    if bias and bias in p:
+        d["b"] = p[bias]
+    return d
+
+
+def dense(p: Dict[str, jax.Array], x: jax.Array, mode: str = "none",
+          binarized: bool = True) -> jax.Array:
+    """Apply a (possibly binarized, possibly packed) linear layer."""
+    if "wp" in p:  # packed serving layout (TULIP path)
+        w = unpack_bits(p["wp"], axis=0, dtype=x.dtype) * p["alpha"]
+        y = x @ w
+    elif mode == "none" or not binarized:
+        y = x @ p["w"]
+    else:
+        w = p["w"]
+        alpha = jax.lax.stop_gradient(
+            jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0)).astype(x.dtype)
+        wb = ste_sign(w)
+        if mode == "weights+acts":
+            x = ste_sign(x)
+        y = (x @ wb) * alpha
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ------------------------------------------------------------------ #
+# norms                                                                #
+# ------------------------------------------------------------------ #
+def norm_init(d: int, kind: str, dtype) -> Dict[str, jax.Array]:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) \
+            + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# rotary position embedding                                            #
+# ------------------------------------------------------------------ #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                 # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# activations / MLP                                                    #
+# ------------------------------------------------------------------ #
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def mlp_init(key, cfg, d_in: Optional[int] = None) -> Dict[str, Any]:
+    d = d_in or cfg.d_model
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {}
+    if cfg.glu:
+        p["w_gate"] = dense_init(ks[0], d, cfg.d_ff, dt,
+                                 bias=cfg.attn_bias)["w"]
+        p["w_up"] = dense_init(ks[1], d, cfg.d_ff, dt)["w"]
+    else:
+        p["w_up"] = dense_init(ks[1], d, cfg.d_ff, dt)["w"]
+        if cfg.attn_bias:
+            p["b_up"] = jnp.zeros((cfg.d_ff,), dt)
+    p["w_down"] = dense_init(ks[2], cfg.d_ff, d, dt)["w"]
+    if cfg.attn_bias:
+        p["b_down"] = jnp.zeros((d,), dt)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, cfg) -> jax.Array:
+    mode = cfg.binarize if cfg.binarize_ffn else "none"
+    f = act_fn(cfg.act)
+    if cfg.glu:
+        g = dense(wparams(p, "w_gate"), x, mode)
+        u = dense(wparams(p, "w_up"), x, mode)
+        h = f(g) * u
+    else:
+        h = f(dense(wparams(p, "w_up", "b_up"), x, mode))
+    h = shard_act(h, (("pod", "data"), None, "model"))
+    return dense(wparams(p, "w_down", "b_down"), h, mode)
+
+
+# ------------------------------------------------------------------ #
+# embedding / logits                                                   #
+# ------------------------------------------------------------------ #
+def embed_init(key, cfg) -> jax.Array:
+    v = cfg.padded_vocab()
+    return jax.random.normal(key, (v, cfg.d_model), dtype_of(cfg)) * 0.02
+
+
+def embed_lookup(emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(emb, tokens, axis=0)
+
+
+def logits_apply(emb_or_head: jax.Array, x: jax.Array,
+                 transpose: bool) -> jax.Array:
+    w = emb_or_head.T if transpose else emb_or_head
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def chunked_xent(x: jax.Array, emb: jax.Array, targets: jax.Array,
+                 transpose: bool, chunk: int) -> jax.Array:
+    """Cross-entropy over a huge vocab without materializing full logits.
+
+    Computes logsumexp over vocab chunks via a scan and gathers the
+    target logit; x: [B,S,D], emb: [V,D] (transpose=True) or [D,V].
+    """
+    w = emb if transpose else emb.T            # [V, D]
+    V = w.shape[0]
+    n_chunks = max(1, -(-V // chunk))
+    c = -(-V // n_chunks)
+    pad = n_chunks * c - V
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    wc = w.reshape(n_chunks, c, w.shape[1])
+
+    @jax.checkpoint
+    def body(carry, wi_i):
+        # rematerialized in backward: full [B,S,V] logits never live
+        m, lse, tgt = carry
+        wi, i = wi_i
+        logits = jnp.einsum("bsd,cd->bsc", x, wi.astype(x.dtype)
+                            ).astype(jnp.float32)
+        base = i * c
+        col = base + jnp.arange(c)
+        logits = jnp.where(col[None, None, :] < V, logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        lse = jnp.exp(m - m_new) * lse + p.sum(axis=-1)
+        idx = targets - base
+        in_chunk = (idx >= 0) & (idx < c)
+        got = jnp.take_along_axis(
+            logits, jnp.clip(idx, 0, c - 1)[..., None], axis=-1)[..., 0]
+        tgt = jnp.where(in_chunk, got, tgt)
+        return (m_new, lse, tgt), None
+
+    B, S = targets.shape
+    init = (jnp.full((B, S), -jnp.inf, jnp.float32),
+            jnp.zeros((B, S), jnp.float32),
+            jnp.zeros((B, S), jnp.float32))
+    (m, lse, tgt), _ = jax.lax.scan(
+        body, init, (wc, jnp.arange(n_chunks)))
+    return (m + jnp.log(lse)) - tgt            # per-token nll

@@ -1,0 +1,181 @@
+"""Top-level model: init, forward, train loss, prefill, decode.
+
+One code path serves all ten assigned architectures; the config decides
+the block pattern, attention flavor, MoE, recurrence, enc-dec and
+modality-frontend stubs (audio frames / image patches arrive as
+precomputed embeddings per the assignment).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.models.layers import (chunked_xent, dtype_of, embed_init,
+                                 embed_lookup, logits_apply, norm_init,
+                                 apply_norm)
+from repro.runtime.sharding import shard_act
+
+
+def decoder_pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.is_encdec:
+        return ("encdec",) * cfg.num_layers
+    return cfg.pattern_for_layers()
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    params: Dict[str, Any] = {"embed": embed_init(ks[0], cfg)}
+    params["decoder"] = tfm.stack_init(ks[1], cfg, decoder_pattern(cfg))
+    params["final_norm"] = norm_init(cfg.d_model, cfg.norm, dtype_of(cfg))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[2], cfg)
+    if cfg.learned_pos:
+        params["pos_emb"] = jax.random.normal(
+            ks[3], (cfg.max_position, cfg.d_model), dtype_of(cfg)) * 0.02
+    if cfg.is_encdec:
+        params["encoder"] = {
+            "stack": tfm.stack_init(ks[4], cfg,
+                                    ("full_attn",) * cfg.encoder_layers),
+            "final_norm": norm_init(cfg.d_model, cfg.norm, dtype_of(cfg)),
+            "pos_emb": jax.random.normal(
+                ks[5], (cfg.encoder_seq, cfg.d_model), dtype_of(cfg)) * 0.02,
+        }
+    return params
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    x = frames.astype(dtype_of(cfg))
+    x = x + params["encoder"]["pos_emb"][None, :x.shape[1]]
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _, _ = tfm.stack_apply(params["encoder"]["stack"], x, cfg,
+                              ("full_attn",) * cfg.encoder_layers,
+                              positions=pos)
+    return apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+def _ctx_from_inputs(params, cfg, batch: Dict[str, jax.Array]):
+    if cfg.is_encdec and "frames" in batch:
+        return encode(params, cfg, batch["frames"])
+    if cfg.frontend == "vision_patches" and "image_embeds" in batch:
+        return batch["image_embeds"].astype(dtype_of(cfg))
+    return None
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            ctx: Optional[jax.Array] = None,
+            cache_capacity: int = 0):
+    """Full-sequence forward.  Returns (hidden, caches, aux)."""
+    B, S = tokens.shape
+    x = embed_lookup(params["embed"], tokens).astype(dtype_of(cfg))
+    x = shard_act(x, (("pod", "data"), None, "model"))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    if cfg.learned_pos:
+        x = x + params["pos_emb"][None, :S]
+    x, caches, aux = tfm.stack_apply(
+        params["decoder"], x, cfg, decoder_pattern(cfg), positions=pos,
+        ctx=ctx, cache_capacity=cache_capacity)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, caches, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Next-token cross entropy (+ MoE aux)."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    ctx = _ctx_from_inputs(params, cfg, batch)
+    x, _, aux = forward(params, cfg, tokens, ctx=ctx)
+    emb = params.get("lm_head", params["embed"])
+    if cfg.logits_chunk:
+        nll = chunked_xent(x, emb, targets, transpose=True,
+                           chunk=cfg.logits_chunk)
+    else:
+        logits = logits_apply(emb, x, transpose=True)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, targets[..., None],
+                                  axis=-1)[..., 0]
+        nll = lse - tgt
+    loss = nll.mean()
+    if cfg.num_experts:
+        loss = loss + cfg.router_aux_coef * aux
+    return loss
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            cache_capacity: int):
+    """Process the prompt; returns (last-token logits, caches)."""
+    tokens = batch["tokens"]
+    ctx = _ctx_from_inputs(params, cfg, batch)
+    x, caches, _ = forward(params, cfg, tokens, ctx=ctx,
+                           cache_capacity=cache_capacity)
+    emb = params.get("lm_head", params["embed"])
+    logits = logits_apply(emb, x[:, -1:], transpose=True)
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """One token step.  batch: {"tokens": [B,1], "step": [B],
+    "caches": pytree}.  Returns (logits [B,1,V], new caches)."""
+    tokens, step, caches = batch["tokens"], batch["step"], batch["caches"]
+    B = tokens.shape[0]
+    x = embed_lookup(params["embed"], tokens).astype(dtype_of(cfg))
+    if cfg.learned_pos:
+        x = x + jnp.take(params["pos_emb"], step, axis=0)[:, None]
+    x, new_caches, _ = tfm.stack_apply(
+        params["decoder"], x, cfg, decoder_pattern(cfg),
+        caches=caches, step=step)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    emb = params.get("lm_head", params["embed"])
+    logits = logits_apply(emb, x, transpose=True)
+    return logits, new_caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int):
+    ctx_len = _ctx_len(cfg)
+    return tfm.stack_cache_init(cfg, decoder_pattern(cfg), batch, capacity,
+                                ctx_len=ctx_len)
+
+
+def _ctx_len(cfg: ModelConfig) -> int:
+    if cfg.is_encdec:
+        return cfg.encoder_seq
+    if cfg.num_image_tokens:
+        return cfg.num_image_tokens
+    return 0
+
+
+# ------------------------------------------------------------------ #
+# input specs (ShapeDtypeStruct stand-ins for the dry-run)             #
+# ------------------------------------------------------------------ #
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for one assignment cell — no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    out: Dict[str, Any]
+    if shape.kind == "train":
+        out = {"tokens": tok, "targets": jax.ShapeDtypeStruct((B, S),
+                                                              jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": tok}
+    else:  # decode: one new token against a capacity-S cache
+        caches = jax.eval_shape(lambda: init_caches(cfg, B, S))
+        out = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+               "step": jax.ShapeDtypeStruct((B,), jnp.int32),
+               "caches": caches}
+    if shape.kind != "decode":
+        if cfg.is_encdec:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), dtype_of(cfg))
+        elif cfg.frontend == "vision_patches":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_image_tokens, cfg.d_model), dtype_of(cfg))
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter shapes without allocation (jax.eval_shape over init)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))

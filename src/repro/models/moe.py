@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN (phi-3.5-MoE 16e/top-2, mixtral 8e/top-2).
+
+Two dispatch implementations:
+
+  * "dense"  — every expert runs on every token, combined with top-k
+    routing weights.  Shape-static, sharding-friendly reference; the
+    compiled FLOPs are E/top_k x the active-parameter FLOPs (visible in
+    the roofline "useful ratio"; see EXPERIMENTS.md §Perf).
+  * "capacity" — GShard-style capacity-C one-hot dispatch einsums; the
+    FLOPs scale with top_k * capacity_factor instead of E.  Used by the
+    perf hillclimb.
+
+Expert weights are [E, d_model, d_ff]; d_ff is tensor-parallel over
+"model", the expert dim shards over "data" when divisible (EP).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import ste_sign, unpack_bits
+from repro.models.layers import act_fn, dtype_of
+from repro.runtime.sharding import shard_act
+
+
+def moe_init(key, cfg) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dt) * s,
+        "w_up": jax.random.normal(ks[2], (e, d, f), dt) * s,
+        "w_down": jax.random.normal(ks[3], (e, f, d), dt)
+        * (1.0 / math.sqrt(f)),
+    }
+
+
+def _get_w(p, name, mode, dtype):
+    """Dense latent weights (train) or packed serving layout."""
+    if name + "_p" in p:
+        w = unpack_bits(p[name + "_p"], axis=1, dtype=dtype)
+        return w * p[name + "_alpha"].astype(dtype)
+    return _maybe_bin(p[name], mode)
+
+
+def _maybe_bin(w, mode):
+    if mode == "none":
+        return w
+    alpha = jax.lax.stop_gradient(
+        jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True)
+    ).astype(w.dtype)
+    return ste_sign(w) * alpha
+
+
+def router_probs(p, x, cfg):
+    """Returns (top-k weights [B,S,k], indices [B,S,k], aux loss)."""
+    logits = (x.astype(jnp.float32) @ p["router"])        # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # load-balancing aux loss (Switch):  E * sum_e f_e * p_e
+    e = cfg.num_experts
+    me = jnp.mean(probs, axis=(0, 1))
+    one_hot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+    fe = jnp.mean(one_hot.sum(axis=2), axis=(0, 1))
+    aux = e * jnp.sum(me * fe)
+    return w.astype(x.dtype), idx, aux
+
+
+def moe_apply(p, x, cfg, impl: str = "dense") -> Tuple[jax.Array, jax.Array]:
+    mode = cfg.binarize if cfg.binarize_ffn else "none"
+    w, idx, aux = router_probs(p, x, cfg)
+    f = act_fn(cfg.act)
+    wg = _get_w(p, "w_gate", mode, x.dtype)
+    wu = _get_w(p, "w_up", mode, x.dtype)
+    wd = _get_w(p, "w_down", mode, x.dtype)
+
+    if impl == "dense":
+        g = jnp.einsum("bsd,edf->besf", x, wg)
+        u = jnp.einsum("bsd,edf->besf", x, wu)
+        h = f(g) * u
+        h = shard_act(h, (("pod", "data"), None, None, "model"))
+        y_e = jnp.einsum("besf,efd->besd", h, wd)        # [B,E,S,D]
+        comb = jnp.zeros(x.shape[:2] + (cfg.num_experts,), x.dtype)
+        comb = jnp.sum(jax.nn.one_hot(idx, cfg.num_experts,
+                                      dtype=x.dtype) * w[..., None], axis=2)
+        y = jnp.einsum("besd,bse->bsd", y_e, comb)
+        return y, aux
+
+    # capacity-based dispatch: tokens -> [E, C] buffers.
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    cap = int(2.0 * S * k / E) or 1
+    # position of each (token, k) within its expert's buffer
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # [B,S,k,E]
+    flat = onehot.reshape(B, S * k, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - 1               # [B,S*k,E]
+    pos = jnp.sum(flat * pos_in_e, axis=-1).reshape(B, S, k)
+
+    if impl == "capacity":
+        # GShard one-hot dispatch einsums (reference).  §Perf finding:
+        # the dispatch einsum is O(S*k*E*C*D) — *more* FLOPs than the
+        # experts it saves; kept for comparison, superseded by "gather".
+        keep = (pos < cap)
+        disp = (jax.nn.one_hot(idx, E, dtype=x.dtype)[..., None]
+                * jax.nn.one_hot(pos, cap, dtype=x.dtype)[..., None, :]
+                * keep[..., None, None].astype(x.dtype))  # [B,S,k,E,C]
+        xe = jnp.einsum("bsd,bskec->becd", x, disp)       # [B,E,C,D]
+        h = f(jnp.einsum("becd,edf->becf", xe, wg)) \
+            * jnp.einsum("becd,edf->becf", xe, wu)
+        h = shard_act(h, (("pod", "data"), None, None, "model"))
+        ye = jnp.einsum("becf,efd->becd", h, wd)
+        y = jnp.einsum("becd,bskec,bsk->bsd", ye, disp, w.astype(x.dtype))
+        return y, aux
+
+    # impl == "gather": scatter/gather dispatch — data movement is
+    # O(E*C*D), expert GEMMs dominate (the dropless-MoE shape)
+    bb = jnp.arange(B)[:, None, None]
+    tok = jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, k))
+    slot = jnp.where(pos < cap, pos, cap)                 # cap slot drops
+    buf_tok = jnp.zeros((B, E, cap + 1), jnp.int32).at[
+        bb, idx, slot].set(tok, mode="drop")[:, :, :cap]  # [B,E,C]
+    xe = jnp.take_along_axis(
+        x[:, None, :, :], buf_tok[..., None], axis=2)     # [B,E,C,D]
+    h = f(jnp.einsum("becd,edf->becf", xe, wg)) \
+        * jnp.einsum("becd,edf->becf", xe, wu)
+    h = shard_act(h, (("pod", "data"), None, None, "model"))
+    ye = jnp.einsum("becf,efd->becd", h, wd)               # [B,E,C,D]
+    # combine: gather each token's k expert outputs back from the
+    # buffers: ye[b, idx[b,s,j], slot[b,s,j], :]
+    ye_flat = ye.reshape(B, E * cap, D)
+    gidx = idx * cap + jnp.minimum(slot, cap - 1)          # [B,S,k]
+    picked = jnp.take_along_axis(
+        ye_flat[:, None, :, :],
+        gidx.reshape(B, S * k)[:, None, :, None], axis=2
+    ).reshape(B, S, k, D)
+    picked = picked * (pos < cap)[..., None].astype(x.dtype)
+    y = jnp.einsum("bskd,bsk->bsd", picked, w.astype(x.dtype))
+    return y, aux

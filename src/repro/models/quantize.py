@@ -1,0 +1,93 @@
+"""Offline weight packing: latent bf16 weights -> TULIP serving layout.
+
+Rewrites the parameter tree so every binarizable projection is stored
+as {name}_p (uint32, 32 weights/word over the input dim) + {name}_alpha
+(per-output-channel XNOR-Net scale).  `dense()`/`moe_apply` dispatch on
+the packed keys, so the same model code serves both layouts; HBM weight
+traffic drops 16x vs bf16 — the decode-cell memory-roofline lever
+(EXPERIMENTS.md §Perf).
+
+Works on concrete arrays *and* under jax.eval_shape (the dry-run packs
+abstract parameters).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import pack_bits
+
+# 2-D weights packed over axis 0 (input dim); selected by key name
+_PACK2D = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+           "in_proj", "out_proj", "gate_proj"}
+# MoE expert weights [E, K, N] packed over axis 1
+_PACK3D = {"w_gate", "w_up", "w_down"}
+
+
+def _pack2d(w: jax.Array):
+    alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0).astype(w.dtype)
+    wp = pack_bits(jnp.where(w > 0, 1.0, -1.0).astype(jnp.float32), axis=0)
+    return wp, alpha
+
+
+def _pack3d(w: jax.Array):
+    alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=1,
+                     keepdims=True).astype(w.dtype)
+    wp = pack_bits(jnp.where(w > 0, 1.0, -1.0).astype(jnp.float32), axis=1)
+    return wp, alpha
+
+
+def _walk(node: Any, path: str) -> Any:
+    if isinstance(node, dict):
+        out: Dict[str, Any] = {}
+        in_moe = path.endswith("/moe")
+        for k, v in node.items():
+            p = f"{path}/{k}"
+            if isinstance(v, dict) or isinstance(v, (list, tuple)):
+                out[k] = _walk(v, p)
+            elif hasattr(v, "ndim") and k in _PACK2D and v.ndim == 2 \
+                    and v.shape[0] % 32 == 0 and not in_moe:
+                wp, alpha = _pack2d(v)
+                out[k + "_p"] = wp
+                out[k + "_alpha"] = alpha
+            elif hasattr(v, "ndim") and k in _PACK3D and v.ndim == 3 \
+                    and v.shape[1] % 32 == 0:
+                wp, alpha = _pack3d(v)
+                out[k + "_p"] = wp
+                out[k + "_alpha"] = alpha
+            else:
+                out[k] = v
+        return out
+    if isinstance(node, tuple):
+        return tuple(_walk(v, f"{path}/{i}") for i, v in enumerate(node))
+    if isinstance(node, list):
+        return [_walk(v, f"{path}/{i}") for i, v in enumerate(node)]
+    return node
+
+
+def pack_model_params(params: Any) -> Any:
+    """Pack every binarizable projection; stacked (scan) params keep
+    their leading layer dim via vmap."""
+
+    def pack_tree(tree, path=""):
+        return _walk(tree, path)
+
+    out = dict(params)
+    # decoder/encoder stacks: leaves carry a leading [n_cycles] dim —
+    # vmap the packing over it
+    def pack_stack(stack):
+        s = dict(stack)
+        s["layers"] = tuple(
+            jax.vmap(lambda t: _walk(t, "/layers"))(blk)
+            for blk in stack["layers"])
+        s["rem"] = tuple(_walk(b, "/rem") for b in stack["rem"])
+        return s
+
+    out["decoder"] = pack_stack(params["decoder"])
+    if "encoder" in params:
+        enc = dict(params["encoder"])
+        enc["stack"] = pack_stack(params["encoder"]["stack"])
+        out["encoder"] = enc
+    return out

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin, arXiv:2402.19427).
+
+    r_t = sigmoid(Wa x_t + ba)            (recurrence gate)
+    i_t = sigmoid(Wx x_t + bx)            (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal recurrence runs as an associative scan in fp32 (precision-
+critical, kept on the "MAC path" per DESIGN.md §5); the surrounding
+projections and the conv1d are binarizable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dtype_of, wparams
+from repro.models.ssm import _conv_train
+from repro.runtime.sharding import shard_act
+
+_C = 8.0
+
+
+def rglru_init(key, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    # Lambda init so a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.exp(-jnp.log(u) / _C) - 1.0)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * w), dt) * s,   # x and gate-input
+        "conv_w": jax.random.normal(ks[1], (w, cfg.conv1d_width), dt) * 0.1,
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_proj": jax.random.normal(ks[2], (w, 2 * w), dt)
+        * (1.0 / math.sqrt(w)),
+        "a_param": a_param,
+        "out_proj": jax.random.normal(ks[3], (w, d), dt)
+        * (1.0 / math.sqrt(w)),
+    }
+
+
+def rglru_apply(p, x, cfg, state: Optional[Dict] = None):
+    """x: [B,S,D]; state: {"conv": [B,K-1,W], "h": [B,W]}.
+    Returns (y, new_state)."""
+    mode = cfg.binarize if cfg.binarize_ffn else "none"
+    B, S, _ = x.shape
+    w = cfg.lru_width or cfg.d_model
+    K = cfg.conv1d_width
+
+    xz = dense(wparams(p, "in_proj"), x, mode)
+    u, gate_in = jnp.split(xz, 2, axis=-1)        # [B,S,W]
+    u = shard_act(u, (("pod", "data"), None, "model"))
+
+    decode = state is not None and S == 1
+    if decode:
+        conv_in = jnp.concatenate([state["conv"], u], axis=1)
+        uc = sum(conv_in[:, i:i + 1, :] * p["conv_w"][:, i]
+                 for i in range(K)) + p["conv_b"]
+        new_conv = conv_in[:, 1:]
+    else:
+        uc = _conv_train(u, p["conv_w"], p["conv_b"])
+        new_conv = u[:, -(K - 1):] if S >= K \
+            else jnp.pad(u, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    uc = jax.nn.gelu(uc)
+
+    gates = dense(wparams(p, "gate_proj"), uc, "none").astype(jnp.float32)
+    r, i = jnp.split(jax.nn.sigmoid(gates), 2, axis=-1)
+    lam = jax.nn.softplus(p["a_param"])
+    log_a = -_C * lam * r                          # [B,S,W]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i * uc.astype(jnp.float32))
+
+    if decode:
+        h = a[:, 0] * state["h"] + gated[:, 0]
+        hs = h[:, None, :]
+        h_last = h
+    else:
+        def comb(l, r_):
+            return (l[0] * r_[0], r_[0] * l[1] + r_[1])
+        aa, bb = jax.lax.associative_scan(comb, (a, gated), axis=1)
+        h0 = state["h"][:, None] if state is not None \
+            else jnp.zeros((B, 1, w), jnp.float32)
+        hs = aa * h0 + bb
+        h_last = hs[:, -1]
+
+    y = dense(wparams(p, "out_proj"), hs.astype(x.dtype), mode)
+    return y, {"conv": new_conv, "h": h_last}

@@ -1,0 +1,135 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b).
+
+Train/prefill uses a chunked associative scan: a sequential lax.scan
+over time-chunks whose inner step is a parallel associative scan, so
+the materialized state tensor is [B, chunk, d_inner, d_state] instead
+of the full sequence (chunk=16 default; 524k-token sequences stay
+memory-bounded).  Decode is the O(1) single-step recurrence.
+
+The selective scan itself stays in fp32 ("integer layers on the MAC
+path" in the paper's split — recurrence precision is load-bearing);
+in/out projections are binarized (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, dtype_of, wparams
+from repro.runtime.sharding import shard_act
+
+
+def ssm_init(key, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    dtr = cfg.dt_rank_()
+    n = cfg.ssm_state
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * din), dt) * s,
+        "conv_w": jax.random.normal(ks[1], (din, cfg.conv1d_width), dt) * 0.1,
+        "conv_b": jnp.zeros((din,), dt),
+        "x_proj": jax.random.normal(ks[2], (din, dtr + 2 * n), dt)
+        * (1.0 / math.sqrt(din)),
+        "dt_proj": jax.random.normal(ks[3], (dtr, din), dt)
+        * (1.0 / math.sqrt(dtr)),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.exp(jax.random.uniform(ks[4], (din,), jnp.float32)
+                    * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+        ) - 1.0 + 1e-6).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (din, d), dt)
+        * (1.0 / math.sqrt(din)),
+    }
+
+
+def _conv_train(x, w, b):
+    """Causal depthwise conv for full sequences: pad left K-1."""
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(K))
+    return y + b
+
+
+def _scan_chunked(a, bx, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + bx_t over axis 1, chunked associative scan.
+
+    a, bx: [B, S, C, N]; h0: [B, C, N]."""
+    B, S, C, N = a.shape
+    c = chunk
+    while S % c:
+        c -= 1
+    n_chunks = S // c
+    a_c = a.reshape(B, n_chunks, c, C, N)
+    b_c = bx.reshape(B, n_chunks, c, C, N)
+
+    def body(h, ab):
+        ai, bi = ab                               # [B,c,C,N]
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        aa, bb = jax.lax.associative_scan(comb, (ai, bi), axis=1)
+        h_seq = aa * h[:, None] + bb              # [B,c,C,N]
+        return h_seq[:, -1], h_seq
+
+    h_last, hs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, C, N)
+    return h_last, hs
+
+
+def ssm_apply(p, x, cfg, state: Optional[Dict] = None,
+              scan_chunk: int = 16):
+    """x: [B,S,D].  state (decode): {"conv": [B,K-1,din], "h": [B,din,N]}.
+    Returns (y, new_state_or_None)."""
+    mode = cfg.binarize if cfg.binarize_ffn else "none"
+    B, S, _ = x.shape
+    din = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    dtr = cfg.dt_rank_()
+
+    xz = dense(wparams(p, "in_proj"), x, mode)
+    xs, z = jnp.split(xz, 2, axis=-1)             # [B,S,din]
+    xs = shard_act(xs, (("pod", "data"), None, "model"))
+
+    decode = state is not None and S == 1
+    if decode:
+        conv_in = jnp.concatenate([state["conv"], xs], axis=1)
+        y = sum(conv_in[:, i:i + 1, :] * p["conv_w"][:, i]
+                for i in range(cfg.conv1d_width)) + p["conv_b"]
+        new_conv = conv_in[:, 1:]
+    else:
+        y = _conv_train(xs, p["conv_w"], p["conv_b"])
+        new_conv = xs[:, -(cfg.conv1d_width - 1):] if S >= cfg.conv1d_width \
+            else jnp.pad(xs, ((0, 0), (cfg.conv1d_width - 1 - S, 0), (0, 0)))
+    u = jax.nn.silu(y)                            # [B,S,din]
+
+    proj = dense({"w": p["x_proj"]}, u, "none")   # dt/B/C path stays fp
+    dt_r, Bc, Cc = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]
+                         + p["dt_bias"]).astype(jnp.float32)  # [B,S,din]
+    A = -jnp.exp(p["A_log"])                      # [din, N]
+    uf = u.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    da = jnp.exp(dt[..., None] * A)               # [B,S,din,N]
+    dbx = dt[..., None] * Bf[:, :, None, :] * uf[..., None]
+
+    if decode:
+        h = da[:, 0] * state["h"] + dbx[:, 0]     # [B,din,N]
+        ysc = jnp.einsum("bcn,bn->bc", h, Cf[:, 0])[:, None, :]
+        h_last = h
+    else:
+        h0 = jnp.zeros((B, din, n), jnp.float32)
+        h_last, hs = _scan_chunked(da, dbx, h0, scan_chunk)
+        ysc = jnp.einsum("bscn,bsn->bsc", hs, Cf)
+    out = (ysc + uf * p["D"]).astype(x.dtype) * jax.nn.silu(z)
+    y = dense(wparams(p, "out_proj"), out, mode)
+    new_state = {"conv": new_conv, "h": h_last}
+    return y, new_state

@@ -1,0 +1,260 @@
+"""Layer blocks + grouped scan-over-layers stack assembly.
+
+Layers are grouped into repeating pattern cycles (e.g. recurrentgemma's
+(rglru, rglru, local_attn), llama-vision's 4x self + 1 cross) and the
+full cycles run under one jax.lax.scan with weight-stacked parameters —
+keeping the HLO size O(cycle) instead of O(num_layers), which is what
+makes the 512-device dry-run compiles tractable.  Cycle remainders are
+unrolled.
+
+Block kinds:
+  attn          causal self-attention + MLP (or MoE)
+  full_attn     bidirectional self-attention + MLP (encoder)
+  local_attn    windowed causal self-attention + MLP
+  rglru         RG-LRU recurrence + MLP
+  mamba         mamba-1 block (no separate MLP)
+  cross_attn    cross-attention to ctx + MLP (llama-vision image layers)
+  encdec        causal self + cross + MLP (whisper decoder)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_norm, mlp_apply, mlp_init, norm_init,
+                                 dtype_of)
+from repro.runtime.sharding import shard_act
+
+
+# ------------------------------------------------------------------ #
+# block init                                                           #
+# ------------------------------------------------------------------ #
+def block_init(key, cfg, kind: str) -> Dict[str, Any]:
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": norm_init(d, cfg.norm, dt)}
+    if kind == "mamba":
+        p["ssm"] = ssm_mod.ssm_init(ks[0], cfg)
+        return p
+    if kind == "rglru":
+        p["lru"] = rglru_mod.rglru_init(ks[0], cfg)
+    elif kind == "cross_attn":
+        p["attn"] = attn.attn_init(ks[0], cfg, cross=True)
+    else:
+        p["attn"] = attn.attn_init(ks[0], cfg)
+        if kind == "encdec":
+            p["norm_x"] = norm_init(d, cfg.norm, dt)
+            p["xattn"] = attn.attn_init(ks[2], cfg, cross=True)
+    p["norm2"] = norm_init(d, cfg.norm, dt)
+    if cfg.num_experts and kind in ("attn", "full_attn", "local_attn"):
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def init_block_cache(cfg, kind: str, batch: int, capacity: int,
+                     ctx_len: int = 0) -> Optional[Dict]:
+    """Decode-time cache structure for one block."""
+    dt = dtype_of(cfg)
+    if kind == "mamba":
+        din = cfg.ssm_expand * cfg.d_model
+        return {"conv": jnp.zeros((batch, cfg.conv1d_width - 1, din), dt),
+                "h": jnp.zeros((batch, din, cfg.ssm_state), jnp.float32)}
+    if kind == "rglru":
+        w = cfg.lru_width or cfg.d_model
+        return {"conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dt),
+                "h": jnp.zeros((batch, w), jnp.float32)}
+    if kind == "cross_attn":
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim_()
+        return {"k": jnp.zeros((batch, ctx_len, hkv, hd), dt),
+                "v": jnp.zeros((batch, ctx_len, hkv, hd), dt),
+                "pos": jnp.zeros((batch, ctx_len), jnp.int32)}
+    cap = capacity
+    if kind == "local_attn":
+        cap = min(capacity, cfg.local_window or capacity)
+    elif cfg.sliding_window:
+        cap = min(capacity, cfg.sliding_window)
+    c: Dict[str, Any] = {"self": attn.make_cache(cfg, batch, cap)}
+    if kind == "encdec":
+        hkv, hd = cfg.num_kv_heads, cfg.head_dim_()
+        c["cross"] = {"k": jnp.zeros((batch, ctx_len, hkv, hd), dt),
+                      "v": jnp.zeros((batch, ctx_len, hkv, hd), dt),
+                      "pos": jnp.zeros((batch, ctx_len), jnp.int32)}
+    return c
+
+
+# ------------------------------------------------------------------ #
+# block apply                                                          #
+# ------------------------------------------------------------------ #
+def block_apply(p, x, cfg, kind: str, *,
+                positions=None, cache=None, step=None, ctx=None,
+                cache_capacity: int = 0):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = 0.0
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    new_cache: Any = None
+
+    if kind == "mamba":
+        y, st = ssm_mod.ssm_apply(p["ssm"], h, cfg, state=cache)
+        return x + y, st, aux
+    if kind == "rglru":
+        y, st = rglru_mod.rglru_apply(p["lru"], h, cfg, state=cache)
+        new_cache = st
+        x = x + y
+    elif kind == "cross_attn":
+        y, xc = attn.attn_apply(
+            p["attn"], h, cfg, kind="cross",
+            positions=positions, step=step,
+            cache=cache, kv_ext=(ctx, ctx) if ctx is not None else None,
+            build_cache_capacity=cache_capacity)
+        new_cache = xc if xc is not None else cache
+        x = x + y
+    else:
+        window = 0
+        akind = "causal"
+        if kind == "local_attn":
+            window = cfg.local_window
+        elif cfg.sliding_window and kind == "attn":
+            window = cfg.sliding_window
+        if kind == "full_attn":
+            akind = "full"
+        self_cache = cache["self"] if isinstance(cache, dict) \
+            and "self" in cache else cache
+        y, sc = attn.attn_apply(
+            p["attn"], h, cfg, kind=akind, positions=positions,
+            cache=self_cache, step=step, window=window,
+            build_cache_capacity=cache_capacity)
+        x = x + y
+        if kind == "encdec":
+            hx = apply_norm(p["norm_x"], x, cfg.norm)
+            yx, xc = attn.attn_apply(
+                p["xattn"], hx, cfg, kind="cross", positions=positions,
+                step=step,
+                cache=cache["cross"] if isinstance(cache, dict)
+                and "cross" in cache else None,
+                kv_ext=(ctx, ctx) if ctx is not None else None,
+                build_cache_capacity=cache_capacity)
+            x = x + yx
+            new_cache = {"self": sc, "cross": xc if xc is not None
+                         else (cache or {}).get("cross")}
+        else:
+            new_cache = {"self": sc} if sc is not None else None
+
+    if "moe" in p:
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        y2, aux = moe_mod.moe_apply(p["moe"], h2, cfg,
+                                    impl=cfg.moe_impl)
+        x = x + y2
+    elif "mlp" in p:
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        x = x + mlp_apply(p["mlp"], h2, cfg)
+    x = shard_act(x, (("pod", "data"), None, "model"))
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------------ #
+# stacks: grouped scan over pattern cycles                             #
+# ------------------------------------------------------------------ #
+def find_cycle(pattern: Tuple[str, ...]) -> Tuple[Tuple[str, ...], int, int]:
+    """Return (cycle, n_full_cycles, n_remainder)."""
+    n = len(pattern)
+    for c in range(1, n + 1):
+        if all(pattern[i] == pattern[i % c] for i in range(n - (n % c))):
+            # candidate cycle c must also fit at least 2 full repeats
+            # (otherwise scanning buys nothing)
+            if n // c >= 2:
+                return pattern[:c], n // c, n % c
+    return pattern, 1, 0
+
+
+def _stack_trees(trees: List[Any]) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_init(key, cfg, pattern: Tuple[str, ...]) -> Dict[str, Any]:
+    cycle, n_cycles, n_rem = find_cycle(pattern)
+    keys = jax.random.split(key, len(pattern))
+    params: Dict[str, Any] = {"layers": [], "rem": []}
+    for pos in range(len(cycle)):
+        blocks = [block_init(keys[c * len(cycle) + pos], cfg, cycle[pos])
+                  for c in range(n_cycles)]
+        params["layers"].append(_stack_trees(blocks))
+    for r in range(n_rem):
+        idx = n_cycles * len(cycle) + r
+        params["rem"].append(block_init(keys[idx], cfg, pattern[idx]))
+    params["layers"] = tuple(params["layers"])
+    params["rem"] = tuple(params["rem"])
+    return params
+
+
+def stack_cache_init(cfg, pattern, batch: int, capacity: int,
+                     ctx_len: int = 0) -> Dict[str, Any]:
+    cycle, n_cycles, n_rem = find_cycle(pattern)
+    out: Dict[str, Any] = {"layers": [], "rem": []}
+    for pos, kind in enumerate(cycle):
+        per = [init_block_cache(cfg, kind, batch, capacity, ctx_len)
+               for _ in range(n_cycles)]
+        out["layers"].append(_stack_trees(per))
+    for r in range(n_rem):
+        kind = pattern[n_cycles * len(cycle) + r]
+        out["rem"].append(init_block_cache(cfg, kind, batch, capacity,
+                                           ctx_len))
+    out["layers"] = tuple(out["layers"])
+    out["rem"] = tuple(out["rem"])
+    return out
+
+
+def stack_apply(params, x, cfg, pattern, *, positions=None, caches=None,
+                step=None, ctx=None, cache_capacity: int = 0,
+                remat: Optional[str] = None):
+    """Run the full layer stack.  Returns (x, new_caches, aux)."""
+    cycle, n_cycles, n_rem = find_cycle(pattern)
+    remat = remat or cfg.remat
+
+    def one_cycle(x_in, cyc_params, cyc_caches):
+        new_caches, aux_sum = [], 0.0
+        for pos, kind in enumerate(cycle):
+            c_in = cyc_caches[pos] if cyc_caches is not None else None
+            x_in, nc, aux = block_apply(
+                cyc_params[pos], x_in, cfg, kind, positions=positions,
+                cache=c_in, step=step, ctx=ctx,
+                cache_capacity=cache_capacity)
+            new_caches.append(nc)
+            aux_sum = aux_sum + aux
+        return x_in, tuple(new_caches), aux_sum
+
+    if remat != "none":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if remat == "dots" else None)
+        one_cycle = jax.checkpoint(one_cycle, policy=policy,
+                                   static_argnums=())
+
+    def body(carry, xs):
+        x_c, aux_c = carry
+        cyc_params, cyc_caches = xs
+        x_c, ncs, aux = one_cycle(x_c, cyc_params, cyc_caches)
+        return (x_c, aux_c + aux), ncs
+
+    cyc_caches_in = caches["layers"] if caches is not None else None
+    (x, aux_total), new_stacked = jax.lax.scan(
+        body, (x, 0.0), (params["layers"], cyc_caches_in))
+
+    new_rem = []
+    for r in range(n_rem):
+        kind = pattern[n_cycles * len(cycle) + r]
+        c_in = caches["rem"][r] if caches is not None else None
+        x, nc, aux = block_apply(
+            params["rem"][r], x, cfg, kind, positions=positions,
+            cache=c_in, step=step, ctx=ctx, cache_capacity=cache_capacity)
+        new_rem.append(nc)
+        aux_total = aux_total + aux
+    new_caches = {"layers": new_stacked, "rem": tuple(new_rem)}
+    return x, new_caches, aux_total

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,
+                               clip_by_global_norm, global_norm, init,
+                               schedule)
+
+__all__ = ["AdamWConfig", "OptState", "apply_updates",
+           "clip_by_global_norm", "global_norm", "init", "schedule"]

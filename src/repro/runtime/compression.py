@@ -1,0 +1,82 @@
+"""Cross-pod gradient compression with error feedback.
+
+At 2+ pods the gradient all-reduce crosses the slow inter-pod links, so
+pod-boundary traffic gets int8 compression: per-chunk max-abs scaling,
+quantize, all-reduce the int8 payload (summing quantized values), and
+dequantize — with the quantization error fed back into the next step's
+gradient (error-feedback keeps SGD convergence; Karimireddy et al.).
+
+Implemented as pure functions so they compose with pjit: the compressed
+collective is expressed with shard_map over the "pod" axis when a pod
+axis exists, and degrades to identity otherwise.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, chunk: int = 1024):
+    """Returns (q int8, scale f32 per chunk, error f32)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % chunk
+    fp = jnp.pad(flat, (0, pad))
+    blocks = fp.reshape(-1, chunk)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    err = flat - deq
+    return q, scale, err.reshape(x.shape).astype(x.dtype)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape,
+                    dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, error: jax.Array,
+                    chunk: int = 1024) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 psum over `axis_name` (inside shard_map).
+
+    Sum of int8 payloads can reach +-127 * n_pods: accumulate in int32.
+    Returns (mean-reduced gradient, new error)."""
+    q, scale, err = quantize_int8(x + error.astype(x.dtype), chunk)
+    q32 = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    s = jax.lax.psum(scale, axis_name)  # conservative shared scale sum
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    # each pod used its own scale; summing q*own-scale != sum exactly,
+    # so we all-reduce scales too and use the mean scale approximation
+    mean_scale = s / n
+    deq = (q32.astype(jnp.float32) * mean_scale)
+    out = dequantize_int8(deq.astype(jnp.float32), jnp.ones_like(mean_scale),
+                          x.shape, x.dtype)
+    return out / n, err
+
+
+def compress_tree_psum(grads: Any, errors: Any, axis_name: str,
+                       chunk: int = 1024) -> Tuple[Any, Any]:
+    outs = jax.tree.map(
+        lambda g, e: compressed_psum(g, axis_name, e, chunk),
+        grads, errors)
+    new_g = jax.tree.map(lambda t: t[0], outs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_e = jax.tree.map(lambda t: t[1], outs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_g, new_e
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compression_ratio(dtype_in=jnp.bfloat16) -> float:
+    return jnp.dtype(dtype_in).itemsize / jnp.dtype(jnp.int8).itemsize

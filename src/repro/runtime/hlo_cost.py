@@ -1,0 +1,330 @@
+"""HLO cost analyzer with loop trip-count scaling.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**,
+which silently undercounts everything inside scan-over-layers /
+flash-attention chunk loops by their trip counts.  This walker parses
+``compiled.as_text()``, resolves operand shapes from instruction
+definitions, detects loop trip counts from the condition computation's
+s32 constants, and recursively scales:
+
+  * flops      — dot_general: 2 * |result| * contraction; elementwise
+                 arithmetic: |result| (counted inside fusion bodies too)
+  * bytes      — operand + result bytes at materialization boundaries
+                 (fusion instructions, dots, copies, slices, collectives)
+  * collective — operand bytes per collective kind
+
+All quantities are per-device (the module is post-SPMD-partitioning).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+             "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+             "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+"
+    r"([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],]+))")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "exponential",
+    "log", "tanh", "rsqrt", "sqrt", "negate", "maximum", "minimum",
+    "and", "or", "xor", "not", "select", "compare", "convert", "floor",
+    "ceil", "abs", "sign", "cosine", "sine", "logistic", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "clamp", "exponential-minus-one", "log-plus-one", "atan2",
+}
+_FREE = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota", "reshape"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+    def operands(self) -> List[str]:
+        # operand names up to the closing paren of the operand list
+        depth, end = 0, len(self.rest)
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        return _OPND_RE.findall(self.rest[:end])
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+    params: List[str] = field(default_factory=list)
+
+    def slice_overrides(self) -> Tuple[Dict[int, int], Optional[int]]:
+        """(param-index -> charged bytes, result-override bytes or None).
+
+        Params consumed via dynamic-slice / gather charge the slice
+        size; dynamic-update-slice charges the update region (the array
+        is updated in place) — XLA's bytes-accessed semantics.  Without
+        this, a scan reading/updating one layer of a stacked tensor per
+        iteration is charged the full stack every trip."""
+        over: Dict[int, int] = {}
+        result_over: Optional[int] = None
+        pidx = {n: i for i, n in enumerate(self.params)}
+        for ins in self.instrs:
+            ops = ins.operands()
+            if ins.op in ("dynamic-slice", "gather"):
+                if ops and ops[0] in pidx:
+                    over[pidx[ops[0]]] = _shape_bytes(ins.type_str)
+            elif ins.op == "dynamic-update-slice" and len(ops) > 1:
+                upd = _shape_bytes(self.shapes.get(ops[1], ""))
+                if ops[0] in pidx:
+                    over[pidx[ops[0]]] = upd
+                result_over = upd
+        return over, result_over
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s:
+            continue
+        header = _COMP_RE.match(s)
+        if header and s.rstrip().endswith("{"):
+            cur = Computation(header.group(1))
+            comps[cur.name] = cur
+            # parameter shapes from the header signature (in order)
+            sig = s[s.find("("):s.rfind("->")]
+            for pname, ptype in _PARAM_RE.findall(sig):
+                cur.shapes[pname] = ptype
+                cur.params.append(pname)
+            continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(s)
+        if m:
+            name, type_str, op, rest = m.groups()
+            cur.instrs.append(Instr(name, type_str, op, rest))
+            cur.shapes[name] = type_str
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation,
+               global_shapes: Dict[str, str]) -> float:
+    out_elems = _shape_elems(instr.type_str)
+    ops = instr.operands()
+    lhs_type = comp.shapes.get(ops[0], global_shapes.get(ops[0], "")) \
+        if ops else ""
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    contraction = 1
+    if m and lhs_type:
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            dims = [int(x) for x in sm.group(2).split(",") if x]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(dims):
+                    contraction *= dims[int(d)]
+    return 2.0 * out_elems * max(contraction, 1)
+
+
+def _trip_count(cond: Computation, consts: Dict[str, int]) -> int:
+    best = 1
+    for ins in cond.instrs:
+        for c in _CONST_RE.findall(ins.rest):
+            best = max(best, int(c))
+        for op in ins.operands():
+            if op in consts:
+                best = max(best, consts[op])
+    return best
+
+
+def analyze(text: str, entry: Optional[str] = None) -> Cost:
+    comps = parse_module(text)
+    # global s32 constants (trip counts usually live beside the while)
+    consts: Dict[str, int] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "constant" and "s32[]" in ins.type_str:
+                m = _CONST_RE.search("constant(" + ins.rest)
+                m2 = re.search(r"constant\((\d+)\)",
+                               ins.type_str + " constant(" + ins.rest)
+                if m2:
+                    consts[ins.name] = int(m2.group(1))
+
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def cost_of(cname: str, inside_fusion: bool) -> Cost:
+        key = (cname, inside_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()  # cycle guard
+        comp = comps.get(cname)
+        if comp is None:
+            return memo[key]
+        c = Cost()
+        for ins in comp.instrs:
+            if ins.op in _FREE:
+                continue
+            if ins.op == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                # prefer XLA's own annotation; fall back to the condition
+                # computation's s32 constants
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                elif cond and cond.group(1) in comps:
+                    trips = _trip_count(comps[cond.group(1)], consts)
+                else:
+                    trips = 1
+                if body:
+                    c.add(cost_of(body.group(1), False), mult=trips)
+                continue
+            if ins.op in ("call", "conditional", "custom-call"):
+                for callee in _CALLS_RE.findall(ins.rest):
+                    c.add(cost_of(callee, inside_fusion))
+                if not inside_fusion:
+                    c.bytes += _shape_bytes(ins.type_str)
+                continue
+            if ins.op == "fusion":
+                callee = _CALLS_RE.search(ins.rest)
+                over: Dict[int, int] = {}
+                res_over: Optional[int] = None
+                if callee:
+                    c.add(cost_of(callee.group(1), True))
+                    cal = comps.get(callee.group(1))
+                    if cal is not None:
+                        over, res_over = cal.slice_overrides()
+                # materialization boundary: operands + result, but
+                # dynamic-sliced/updated params charge only the slice
+                c.bytes += (res_over if res_over is not None
+                            else _shape_bytes(ins.type_str))
+                for i, op in enumerate(ins.operands()):
+                    if i in over:
+                        c.bytes += over[i]
+                        continue
+                    t = comp.shapes.get(op)
+                    if t:
+                        c.bytes += _shape_bytes(t)
+                continue
+            if ins.op in _COLLECTIVES:
+                kind = ins.op.replace("-start", "")
+                nbytes = 0
+                for op in ins.operands():
+                    t = comp.shapes.get(op)
+                    if t:
+                        nbytes += _shape_bytes(t)
+                nbytes = nbytes or _shape_bytes(ins.type_str)
+                c.collectives[kind] = c.collectives.get(kind, 0) + nbytes
+                c.bytes += nbytes + _shape_bytes(ins.type_str)
+                continue
+            if ins.op == "dot":
+                c.flops += _dot_flops(ins, comp, {})
+                if not inside_fusion:
+                    c.bytes += _shape_bytes(ins.type_str)
+                    for op in ins.operands():
+                        t = comp.shapes.get(op)
+                        if t:
+                            c.bytes += _shape_bytes(t)
+                continue
+            if ins.op in _ELEMENTWISE or ins.op in (
+                    "reduce", "broadcast", "transpose", "reverse",
+                    "concatenate", "slice", "pad", "gather", "scatter",
+                    "dynamic-slice", "dynamic-update-slice", "copy",
+                    "sort", "rng", "exponential", "map", "reduce-window"):
+                if ins.op in _ELEMENTWISE or ins.op in ("reduce", "map"):
+                    c.flops += _shape_elems(ins.type_str)
+                if not inside_fusion:
+                    res = _shape_bytes(ins.type_str)
+                    if ins.op == "dynamic-slice":
+                        c.bytes += 2 * res          # read slice + write
+                    elif ins.op == "dynamic-update-slice":
+                        # read+write the updated region only (in-place)
+                        ops = ins.operands()
+                        upd = comp.shapes.get(ops[1]) if len(ops) > 1 else None
+                        c.bytes += 2 * (_shape_bytes(upd) if upd else res)
+                    else:
+                        c.bytes += res
+                        for op in ins.operands():
+                            t = comp.shapes.get(op)
+                            if t:
+                                c.bytes += _shape_bytes(t)
+                continue
+            # unknown op: count result bytes conservatively
+            if not inside_fusion:
+                c.bytes += _shape_bytes(ins.type_str)
+        memo[key] = c
+        return c
+
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+        entry_name = m.group(1) if m else next(iter(comps))
+    return cost_of(entry_name, False)

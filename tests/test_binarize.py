@@ -1,0 +1,117 @@
+"""Binarization, packing, popcount-dot, and threshold folding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binarize import (binarize_weights, pack_bits, popcount_u32,
+                                 sign_dot_reference, ste_sign, unpack_bits,
+                                 xnor_popcount_dot)
+from repro.core.bnn_layers import (apply_folded, bn_reference,
+                                   bnn_dense_train, fold_bn_threshold,
+                                   quantize_for_serving)
+
+
+def test_ste_sign_forward_backward():
+    x = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+    np.testing.assert_array_equal(ste_sign(x), [-1, -1, 1, 1, 1])
+    g = jax.grad(lambda v: ste_sign(v).sum())(x)
+    np.testing.assert_array_equal(g, [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+@given(st.integers(1, 8), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(words, rows, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.choice([-1.0, 1.0], size=(rows, words * 32)).astype(np.float32)
+    packed = pack_bits(jnp.asarray(x), axis=-1)
+    assert packed.shape == (rows, words)
+    back = unpack_bits(packed, axis=-1, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+def test_pack_axis0():
+    rng = np.random.default_rng(0)
+    x = rng.choice([-1.0, 1.0], size=(64, 5)).astype(np.float32)
+    packed = pack_bits(jnp.asarray(x), axis=0)
+    assert packed.shape == (2, 5)
+    back = unpack_bits(packed, axis=0, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+def test_popcount_u32():
+    vals = np.array([0, 1, 0xFFFFFFFF, 0x80000000, 0x0F0F0F0F, 12345678],
+                    dtype=np.uint32)
+    expect = np.array([bin(int(v)).count("1") for v in vals])
+    np.testing.assert_array_equal(np.asarray(popcount_u32(jnp.asarray(vals))),
+                                  expect)
+
+
+@pytest.mark.parametrize("k", [32, 64, 96, 50, 288])
+def test_xnor_popcount_dot_matches_sign_dot(k):
+    rng = np.random.default_rng(k)
+    x = rng.normal(size=(7, k)).astype(np.float32)
+    w = rng.normal(size=(13, k)).astype(np.float32)
+    pad = (-k) % 32
+    xs = np.where(x > 0, 1.0, -1.0)
+    ws = np.where(w > 0, 1.0, -1.0)
+    xp = pack_bits(jnp.asarray(np.pad(xs, ((0, 0), (0, pad)),
+                                      constant_values=-1.0)))
+    wp = pack_bits(jnp.asarray(np.pad(ws, ((0, 0), (0, pad)),
+                                      constant_values=-1.0)))
+    got = xnor_popcount_dot(xp, wp, k)
+    ref = sign_dot_reference(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_threshold_fold_exact(seed):
+    """sign(BN(s)) == folded integer comparison, bit-for-bit (paper §IV-D)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 200))
+    ch = 8
+    mu = rng.normal(scale=n / 4, size=ch)
+    sigma = rng.uniform(0.5, n / 4, size=ch)
+    gamma = rng.normal(size=ch)
+    gamma = np.where(np.abs(gamma) < 1e-3, 0.5, gamma)  # avoid gamma ~ 0
+    beta = rng.normal(size=ch)
+    fold = fold_bn_threshold(mu, sigma, gamma, beta, n)
+    # s = 2*popcount - n takes every integer of parity n in [-n, n]
+    s = jnp.arange(-n, n + 1, 2, dtype=jnp.int32)[:, None]
+    ref = jnp.where(bn_reference(s.astype(jnp.float32), mu, sigma, gamma,
+                                 beta) >= 0, 1.0, -1.0)
+    got = apply_folded(s, fold)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_quantize_for_serving_matches_train_path():
+    """Packed integer serving == float train forward (same sign outputs)."""
+    rng = np.random.default_rng(3)
+    K, N, B = 96, 16, 11
+    w = rng.normal(size=(N, K)).astype(np.float32)
+    x = rng.normal(size=(B, K)).astype(np.float32)
+    mu = rng.normal(scale=2.0, size=N)
+    sigma = rng.uniform(0.5, 3.0, size=N)
+    gamma = np.where(np.abs(rng.normal(size=N)) < 1e-3, 0.7,
+                     rng.normal(size=N))
+    beta = rng.normal(size=N)
+
+    y_train = bnn_dense_train(jnp.asarray(x), jnp.asarray(w), mu, sigma,
+                              gamma, beta)
+    wp, fold = quantize_for_serving(jnp.asarray(w), mu, sigma, gamma, beta)
+    xs = jnp.where(jnp.asarray(x) > 0, 1.0, -1.0)
+    xp = pack_bits(xs, axis=-1)
+    y_serve = apply_folded(xnor_popcount_dot(xp, wp, K), fold)
+    np.testing.assert_array_equal(np.asarray(y_train), np.asarray(y_serve))
+
+
+def test_binarize_weights_scale():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    wb, alpha = binarize_weights(w, axis=1)
+    assert wb.shape == w.shape and alpha.shape == (4, 1)
+    np.testing.assert_allclose(np.asarray(alpha[:, 0]),
+                               np.abs(np.asarray(w)).mean(axis=1), rtol=1e-6)
+    assert set(np.unique(np.asarray(wb))) <= {-1.0, 1.0}

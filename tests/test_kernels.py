@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + fused
+epilogues + hypothesis property tests, all in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binarize import pack_bits
+from repro.kernels import ref
+from repro.kernels.ops import binarize_pack, binary_binary_dense, binary_dense
+from repro.kernels.pack import pack as pack_kernel
+from repro.kernels.popcount_gemm import popcount_gemm
+from repro.kernels.xnor_gemm import xnor_gemm
+
+
+def _mk(m, k, n, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32), dtype)
+    w = rng.choice([-1.0, 1.0], size=(k, n)).astype(np.float32)
+    wp = pack_bits(jnp.asarray(w), axis=0)
+    alpha = jnp.asarray(rng.uniform(0.5, 2.0, size=n).astype(np.float32))
+    return x, jnp.asarray(w), wp, alpha
+
+
+SHAPES = [(128, 128, 128), (256, 512, 128), (128, 1024, 256), (384, 256, 384)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_xnor_gemm_sweep(m, k, n, dtype):
+    x, w, wp, alpha = _mk(m, k, n, m + k + n, dtype)
+    got = xnor_gemm(x, wp, alpha, interpret=True)
+    want = ref.xnor_gemm_ref(x, wp, alpha)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol,
+                               atol=rtol * np.abs(np.asarray(want)).max())
+
+
+def test_xnor_gemm_threshold_epilogue():
+    x, w, wp, alpha = _mk(128, 256, 128, 7)
+    got = xnor_gemm(x, wp, alpha, threshold=0.0, interpret=True)
+    want = ref.xnor_gemm_ref(x, wp, alpha, threshold=0.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_popcount_gemm_sweep(m, k, n):
+    rng = np.random.default_rng(m * 7 + n)
+    xs = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+    ws = rng.choice([-1.0, 1.0], size=(n, k)).astype(np.float32)
+    xp = pack_bits(jnp.asarray(xs), axis=-1)
+    wp = pack_bits(jnp.asarray(ws), axis=-1)
+    got = popcount_gemm(xp, wp, k=k, interpret=True)
+    want = (xs @ ws.T).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_popcount_gemm_threshold():
+    rng = np.random.default_rng(9)
+    m, k, n = 128, 512, 128
+    xs = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+    ws = rng.choice([-1.0, 1.0], size=(n, k)).astype(np.float32)
+    xp = pack_bits(jnp.asarray(xs), axis=-1)
+    wp = pack_bits(jnp.asarray(ws), axis=-1)
+    got = popcount_gemm(xp, wp, k=k, threshold=4, interpret=True)
+    want = np.where((xs @ ws.T) >= 4, 1, -1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("m,k", [(128, 128), (256, 1024), (512, 2048)])
+def test_pack_kernel_sweep(m, k):
+    rng = np.random.default_rng(m + k)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    got = pack_kernel(x, interpret=True)
+    want = ref.pack_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_property_popcount_equals_float_dot(mw, kw, seed):
+    """Property: for any +-1 matrices, the packed popcount path equals
+    the float dot exactly (the paper's XNOR-popcount identity)."""
+    m, k, n = mw * 32, kw * 32, 64
+    rng = np.random.default_rng(seed)
+    xs = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+    ws = rng.choice([-1.0, 1.0], size=(n, k)).astype(np.float32)
+    xp = pack_bits(jnp.asarray(xs), axis=-1)
+    wp = pack_bits(jnp.asarray(ws), axis=-1)
+    got = binary_binary_dense(xp, wp, k=k, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  (xs @ ws.T).astype(np.int32))
+
+
+def test_ops_wrappers_pad_and_reshape():
+    """binary_dense handles non-128 leading dims and 3D inputs."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(3, 37, 128)).astype(np.float32))
+    w = rng.choice([-1.0, 1.0], size=(128, 128)).astype(np.float32)
+    wp = pack_bits(jnp.asarray(w), axis=0)
+    alpha = jnp.ones((128,), jnp.float32)
+    got_i = binary_dense(x, wp, alpha, backend="interpret")
+    got_x = binary_dense(x, wp, alpha, backend="xla")
+    np.testing.assert_allclose(np.asarray(got_i), np.asarray(got_x),
+                               rtol=1e-5, atol=1e-4)
+    p = binarize_pack(x, backend="interpret")
+    p2 = binarize_pack(x, backend="xla")
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p2))

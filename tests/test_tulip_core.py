@@ -1,0 +1,279 @@
+"""Core TULIP machinery: threshold algebra, PE simulator, schedules, trees."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import threshold as th
+from repro.core.adder_tree import (build_tree, make_ext_inputs,
+                                   schedule_tree, storage_bound)
+from repro.core.schedules import (add_fragment, compare_fragment,
+                                  fragments_to_program, leaf_fragment,
+                                  maxpool_fragment, relu_fragment,
+                                  accumulate_fragment, copy_fragment)
+from repro.core.tulip_pe import read_value, run_numpy, run_jax, write_value
+
+
+# ------------------------------------------------------------------ #
+# threshold algebra (exhaustive truth tables)                          #
+# ------------------------------------------------------------------ #
+def test_carry_is_majority():
+    for x, y, c in itertools.product((0, 1), repeat=3):
+        assert th.carry_fn(x, y, c) == (x + y + c >= 2)
+
+
+def test_sum_is_parity():
+    for x, y, c in itertools.product((0, 1), repeat=3):
+        cout = int(th.carry_fn(x, y, c))
+        assert th.sum_fn(x, y, c, cout) == ((x + y + c) % 2 == 1)
+
+
+def test_cmp_step_semantics():
+    for x, y, z in itertools.product((0, 1), repeat=3):
+        expect = x if x != y else z
+        assert th.cmp_step_fn(x, y, z) == expect
+
+
+def test_or4_and2_identity():
+    for bits in itertools.product((0, 1), repeat=4):
+        assert th.or4_fn(*bits) == (sum(bits) >= 1)
+    for x, y in itertools.product((0, 1), repeat=2):
+        assert th.and2_fn(x, y) == (x & y)
+    assert th.identity_fn(0) == 0 and th.identity_fn(1) == 1
+
+
+# ------------------------------------------------------------------ #
+# addition schedule: exhaustive over 4-bit operands                    #
+# ------------------------------------------------------------------ #
+def _run_add(width, xs, ys, jax_backend=False):
+    xbits = list(range(width))
+    ybits = list(range(width))
+    dst = list(range(width + 1))
+    frag = add_fragment(bx=0, by=3, ns=1, nc=2, xbits=xbits, ybits=ybits,
+                        dst_bits=dst)
+    prog, _ = fragments_to_program([frag], [0])
+    B = len(xs)
+    regs0 = np.zeros((B, 4, 16), np.int32)
+    write_value(regs0, 0, xbits, xs)
+    write_value(regs0, 3, ybits, ys)
+    ext = np.zeros((B, len(prog), 4), np.int32)
+    if jax_backend:
+        regs, outs, _ = run_jax(prog, ext, regs0)
+        regs = np.asarray(regs)
+    else:
+        regs, outs, _ = run_numpy(prog, ext, regs0)
+    return read_value(regs, 1, dst)
+
+
+def test_add_4bit_exhaustive():
+    xs, ys = np.meshgrid(np.arange(16), np.arange(16))
+    xs, ys = xs.ravel(), ys.ravel()
+    got = _run_add(4, xs, ys)
+    np.testing.assert_array_equal(got, xs + ys)
+
+
+def test_add_jax_matches_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.integers(0, 64, size=50)
+    ys = rng.integers(0, 64, size=50)
+    got_np = _run_add(6, xs, ys)
+    got_jx = _run_add(6, xs, ys, jax_backend=True)
+    np.testing.assert_array_equal(got_np, xs + ys)
+    np.testing.assert_array_equal(got_jx, xs + ys)
+
+
+def test_add_mixed_widths():
+    frag = add_fragment(bx=1, by=2, ns=0, nc=3, xbits=[0, 1, 2, 3, 4],
+                        ybits=[5, 6], dst_bits=[0, 1, 2, 3, 4, 5])
+    prog, _ = fragments_to_program([frag], [0])
+    rng = np.random.default_rng(1)
+    xs = rng.integers(0, 32, 40)
+    ys = rng.integers(0, 4, 40)
+    regs0 = np.zeros((40, 4, 16), np.int32)
+    write_value(regs0, 1, [0, 1, 2, 3, 4], xs)
+    write_value(regs0, 2, [5, 6], ys)
+    regs, _, _ = run_numpy(prog, np.zeros((40, len(prog), 4), np.int32), regs0)
+    np.testing.assert_array_equal(read_value(regs, 0, range(6)), xs + ys)
+
+
+# ------------------------------------------------------------------ #
+# leaf: 3-input sum from external channels                             #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("n_in", [1, 2, 3])
+def test_leaf(n_in):
+    frag = leaf_fragment(ns=2, nc=1, input_ids=list(range(n_in)),
+                         dst_bits=[0, 1])
+    prog, layout = fragments_to_program([frag], [0])
+    combos = np.array(list(itertools.product((0, 1), repeat=n_in)), np.int32)
+    ext = make_ext_inputs(layout, combos, len(prog))
+    regs, _, _ = run_numpy(prog, ext)
+    np.testing.assert_array_equal(read_value(regs, 2, [0, 1]),
+                                  combos.sum(axis=1))
+
+
+# ------------------------------------------------------------------ #
+# comparator (x > y and x >= const)                                    #
+# ------------------------------------------------------------------ #
+def test_compare_register_operands_exhaustive():
+    xbits, ybits = [0, 1, 2, 3], [4, 5, 6, 7]
+    frag = compare_fragment(bx=0, nz=2, xbits=xbits, by=1, ybits=ybits)
+    prog, _ = fragments_to_program([frag], [0])
+    xs, ys = np.meshgrid(np.arange(16), np.arange(16))
+    xs, ys = xs.ravel(), ys.ravel()
+    regs0 = np.zeros((256, 4, 16), np.int32)
+    write_value(regs0, 0, xbits, xs)
+    write_value(regs0, 1, ybits, ys)
+    _, outs, _ = run_numpy(prog, np.zeros((256, len(prog), 4), np.int32), regs0)
+    np.testing.assert_array_equal(outs[:, 2], (xs > ys).astype(np.int32))
+
+
+@pytest.mark.parametrize("const", [0, 3, 7, 12, 15])
+def test_compare_const(const):
+    xbits = [0, 1, 2, 3]
+    frag = compare_fragment(bx=3, nz=0, xbits=xbits, const=const)
+    prog, _ = fragments_to_program([frag], [0])
+    xs = np.arange(16)
+    regs0 = np.zeros((16, 4, 16), np.int32)
+    write_value(regs0, 3, xbits, xs)
+    _, outs, _ = run_numpy(prog, np.zeros((16, len(prog), 4), np.int32), regs0)
+    np.testing.assert_array_equal(outs[:, 0], (xs > const).astype(np.int32))
+
+
+# ------------------------------------------------------------------ #
+# maxpool / relu / copy / accumulate                                   #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("window", [2, 4, 7, 9])
+def test_maxpool(window):
+    frag = maxpool_fragment(n=1, input_ids=list(range(window)))
+    prog, layout = fragments_to_program([frag], [0])
+    rng = np.random.default_rng(2)
+    bits = (rng.random((64, window)) < 0.3).astype(np.int32)
+    ext = make_ext_inputs(layout, bits, len(prog))
+    _, outs, _ = run_numpy(prog, ext)
+    np.testing.assert_array_equal(outs[:, 1], bits.max(axis=1))
+
+
+def test_relu_gating():
+    # comparator result in N3's latch gates the value broadcast by N1
+    xbits = [0, 1, 2, 3]
+    cmp = compare_fragment(bx=0, nz=2, xbits=xbits, const=5)
+    relu = relu_fragment(bx=0, nz=2, nr=1, xbits=xbits, dst_bits=[4, 5, 6, 7])
+    prog, _ = fragments_to_program([cmp, relu], [0, cmp.n_cycles()])
+    xs = np.arange(16)
+    regs0 = np.zeros((16, 4, 16), np.int32)
+    write_value(regs0, 0, xbits, xs)
+    regs, _, _ = run_numpy(prog, np.zeros((16, len(prog), 4), np.int32), regs0)
+    got = read_value(regs, 1, [4, 5, 6, 7])
+    np.testing.assert_array_equal(got, np.where(xs > 5, xs, 0))
+
+
+def test_copy():
+    frag = copy_fragment(bx=2, nd=0, xbits=[0, 1, 2], dst_bits=[5, 6, 7])
+    prog, _ = fragments_to_program([frag], [0])
+    xs = np.arange(8)
+    regs0 = np.zeros((8, 4, 16), np.int32)
+    write_value(regs0, 2, [0, 1, 2], xs)
+    regs, _, _ = run_numpy(prog, np.zeros((8, len(prog), 4), np.int32), regs0)
+    np.testing.assert_array_equal(read_value(regs, 0, [5, 6, 7]), xs)
+
+
+def test_accumulate_stream():
+    # acc starts in R1 bits 0..2, add a 3-bit external value -> R2
+    frag = accumulate_fragment(bacc=0, ns=1, nc=3, acc_bits=[0, 1, 2],
+                               in_width=3, dst_bits=[0, 1, 2, 3],
+                               ext_channel=1, input_ids=[0, 1, 2])
+    prog, layout = fragments_to_program([frag], [0])
+    rng = np.random.default_rng(3)
+    accs = rng.integers(0, 8, 30)
+    vals = rng.integers(0, 8, 30)
+    val_bits = ((vals[:, None] >> np.arange(3)) & 1).astype(np.int32)
+    ext = make_ext_inputs(layout, val_bits, len(prog))
+    regs0 = np.zeros((30, 4, 16), np.int32)
+    write_value(regs0, 0, [0, 1, 2], accs)
+    regs, _, _ = run_numpy(prog, ext, regs0)
+    np.testing.assert_array_equal(read_value(regs, 1, [0, 1, 2, 3]),
+                                  accs + vals)
+
+
+# ------------------------------------------------------------------ #
+# full adder-tree popcount + threshold (the paper's main schedule)     #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 7, 9, 17, 33, 64, 100])
+@pytest.mark.parametrize("compact", [False, True])
+def test_tree_popcount(n, compact):
+    sched = schedule_tree(n, compact=compact)
+    rng = np.random.default_rng(n)
+    bits = (rng.random((32, n)) < 0.5).astype(np.int32)
+    ext = make_ext_inputs(sched.ext_layout, bits, sched.cycles)
+    regs, _, _ = run_numpy(sched.program, ext)
+    got = read_value(regs, sched.result_neuron, sched.result_bits)
+    np.testing.assert_array_equal(got, bits.sum(axis=1))
+
+
+@pytest.mark.parametrize("n,T", [(9, 5), (27, 14), (100, 51), (288, 144)])
+def test_tree_with_threshold(n, T):
+    sched = schedule_tree(n, threshold=T, compact=True)
+    rng = np.random.default_rng(n + T)
+    bits = (rng.random((24, n)) < 0.5).astype(np.int32)
+    ext = make_ext_inputs(sched.ext_layout, bits, sched.cycles)
+    _, _, hist = run_numpy(sched.program, ext, trace=True)
+    pred = hist[:, sched.cmp_result_cycle, sched.cmp_neuron]
+    np.testing.assert_array_equal(pred, (bits.sum(axis=1) >= T).astype(np.int32))
+
+
+def test_storage_bound_holds():
+    """Paper §III-B: bit-serial accounting peak is O(log^2 N).
+
+    The paper's closed form assumes floor(log2 N) - 1 internal levels;
+    a tree over ceil(N/3) three-input leaves can need one more level
+    (e.g. N=1023 -> 341 leaves -> 9 internal levels), which adds at most
+    one (log2 N + 1)-bit pending operand.  We assert the bound with that
+    single-level slack, and exactness where the level counts agree.
+    """
+    import math
+    for n in (9, 27, 100, 288, 511, 1023):
+        sched = schedule_tree(n, compact=True)
+        bound = storage_bound(n)
+        slack = int(math.floor(math.log2(n))) + 1
+        assert sched.fine_peak_bits <= bound + slack, \
+            f"N={n}: fine peak {sched.fine_peak_bits} vs bound {bound}"
+        # the register file (4 x 16 bits) must always suffice
+        assert sched.peak_storage_bits <= 64
+    # paper's own example regime: 288-input node meets the bound exactly
+    assert schedule_tree(288, compact=True).fine_peak_bits <= storage_bound(288)
+
+
+def test_compaction_improves_cycles():
+    naive = schedule_tree(288, compact=False)
+    compact = schedule_tree(288, compact=True)
+    assert compact.cycles < naive.cycles
+    # paper reports 441 cycles for the 288-input node; our reconstruction
+    # must land in the same regime
+    assert compact.cycles < 1.6 * 441
+    assert naive.cycles < 3.0 * 441
+
+
+def test_tree_jax_backend_matches():
+    sched = schedule_tree(33, compact=True)
+    rng = np.random.default_rng(7)
+    bits = (rng.random((8, 33)) < 0.5).astype(np.int32)
+    ext = make_ext_inputs(sched.ext_layout, bits, sched.cycles)
+    regs_np, _, _ = run_numpy(sched.program, ext)
+    regs_jx, _, _ = run_jax(sched.program, ext)
+    np.testing.assert_array_equal(regs_np, np.asarray(regs_jx))
+
+
+def test_bnn_node_end_to_end():
+    """XNOR products streamed through the PE == reference BNN node."""
+    n, T = 64, 30
+    sched = schedule_tree(n, threshold=T, compact=True)
+    rng = np.random.default_rng(11)
+    x = (rng.random((16, n)) < 0.5).astype(np.int32)
+    w = (rng.random(n) < 0.5).astype(np.int32)
+    prods = 1 - (x ^ w[None, :])
+    ext = make_ext_inputs(sched.ext_layout, prods, sched.cycles)
+    _, _, hist = run_numpy(sched.program, ext, trace=True)
+    pred = hist[:, sched.cmp_result_cycle, sched.cmp_neuron]
+    ref = np.asarray(
+        [int(p) for p in (prods.sum(axis=1) >= T)], dtype=np.int32)
+    np.testing.assert_array_equal(pred, ref)
