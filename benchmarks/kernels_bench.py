@@ -1,24 +1,33 @@
 """Kernel microbenchmark: structural roofline terms for the binarized
-GEMM kernels (no TPU wall-clock on this host — interpret mode checks
-correctness; the numbers here are the data-movement model that drives
-BlockSpec choices).
+GEMM kernels plus measured wall-times on this host, emitted as
+BENCH_kernels.json so future PRs have a perf trajectory to compare
+against.
 
+No TPU wall-clock on a CPU host — interpret mode checks correctness;
+the byte model is the data-movement term that drives BlockSpec choices.
 For a [M,K]x[K,N] binary-weight matmul at bf16 activations:
   dense bf16 weights:  bytes = 2(MK + KN + MN)
   packed weights:      bytes = 2*MK + KN/8 + 2*MN      (16x less W traffic)
   fully binary packed: bytes = MK/8 + KN/8 + 4*MN      (popcount path)
 """
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.binarize import pack_bits
-from repro.kernels.ops import binary_dense, binary_binary_dense
+from repro.kernels.packed import PackedArray
+from repro.kernels.ops import binarize_pack, binary_dense, \
+    binary_binary_dense
 
 HBM_BW = 819e9
 PEAK = 197e12
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "BENCH_kernels.json")
 
 
 def model_bytes(m, k, n):
@@ -29,38 +38,88 @@ def model_bytes(m, k, n):
     }
 
 
-def run(log=print):
+def _wall(fn, *args, iters=3, **kw):
+    """Median wall-time of fn(*args) with block_until_ready."""
+    ts = []
+    for _ in range(iters + 1):        # first call compiles; dropped
+        t0 = time.time()
+        out = fn(*args, **kw)
+        jax.tree.map(
+            lambda a: a.block_until_ready() if hasattr(
+                a, "block_until_ready") else a, out)
+        ts.append(time.time() - t0)
+    return float(np.median(ts[1:]))
+
+
+def run(log=print, out_json=DEFAULT_OUT):
     log("\n== Kernel roofline model (decode-shape binary GEMMs) ==")
     shapes = [(128, 4096, 4096), (128, 12288, 12288), (1, 8192, 8192)]
     log(f"{'M,K,N':>18s} | {'bf16 MB':>9s} {'packedW':>9s} {'both':>9s} | "
         f"{'t_mem bf16':>10s} {'packedW':>9s} {'AI bf16':>8s} {'packedW':>8s}")
-    out = []
+    rows = []
     for m, k, n in shapes:
         b = model_bytes(m, k, n)
         flops = 2 * m * k * n
         t_b = b["bf16"] / HBM_BW
         t_p = b["packed_w"] / HBM_BW
-        out.append((m, k, n, b, t_b / t_p))
+        rows.append({
+            "m": m, "k": k, "n": n, "bytes": b,
+            "flops": flops,
+            "t_mem_bf16_s": t_b, "t_mem_packed_w_s": t_p,
+            "hbm_ratio_bf16_over_packed_w": b["bf16"] / b["packed_w"],
+            "hbm_ratio_bf16_over_packed_both": b["bf16"] / b["packed_both"],
+            "arith_intensity_bf16": flops / b["bf16"],
+            "arith_intensity_packed_w": flops / b["packed_w"],
+        })
         log(f"{f'{m},{k},{n}':>18s} | {b['bf16'] / 1e6:9.2f} "
             f"{b['packed_w'] / 1e6:9.2f} {b['packed_both'] / 1e6:9.2f} | "
             f"{t_b * 1e6:8.1f}us {t_p * 1e6:7.1f}us "
             f"{flops / b['bf16']:8.1f} {flops / b['packed_w']:8.1f}")
-    # correctness spot-check through the public wrappers (interpret mode)
+
+    # correctness spot-check + measured wall-time through the public
+    # wrappers (xla oracle path; interpret mode for bit-exactness)
     rng = np.random.default_rng(0)
     m, k, n = 128, 512, 256
     x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
     w = rng.choice([-1.0, 1.0], size=(k, n)).astype(np.float32)
-    wp = pack_bits(jnp.asarray(w), axis=0)
+    wp = PackedArray.pack(jnp.asarray(w), axis=0)
     alpha = jnp.ones((n,), jnp.float32)
     t0 = time.time()
     y1 = binary_dense(x, wp, alpha, backend="interpret")
     y2 = binary_dense(x, wp, alpha, backend="xla")
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
                                atol=1e-3)
-    log(f"kernel-vs-oracle spot check OK ({time.time() - t0:.2f}s, "
-        "interpret mode)")
+    spot_s = time.time() - t0
+    log(f"kernel-vs-oracle spot check OK ({spot_s:.2f}s, interpret mode)")
+
+    ws = rng.choice([-1.0, 1.0], size=(n, k)).astype(np.float32)
+    wrow = PackedArray.pack(jnp.asarray(ws), axis=-1)
+    xp = binarize_pack(x, backend="xla")
+    measured = {
+        "host_backend": jax.default_backend(),
+        "shape": {"m": m, "k": k, "n": n},
+        "binarize_pack_xla_s": _wall(binarize_pack, x, backend="xla"),
+        "binary_dense_xla_s": _wall(binary_dense, x, wp, alpha,
+                                    backend="xla"),
+        "binary_binary_dense_xla_s": _wall(binary_binary_dense, xp, wrow,
+                                           backend="xla"),
+    }
+    log("measured (this host, xla oracle path): " +
+        ", ".join(f"{k_}={v * 1e3:.2f}ms" for k_, v in measured.items()
+                  if k_.endswith("_s")))
+
+    out = {"hbm_bw_model": HBM_BW, "peak_flops_model": PEAK,
+           "roofline": rows, "spot_check_s": spot_s, "measured": measured}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        log(f"wrote {out_json}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="BENCH_kernels.json path ('' to skip writing)")
+    args = ap.parse_args()
+    run(out_json=args.out or None)

@@ -1,9 +1,12 @@
-"""Quickstart: the TULIP technique end-to-end in 60 lines.
+"""Quickstart: the TULIP technique end-to-end.
 
 1. A BNN node on the cycle-accurate TULIP-PE simulator (the ASIC).
 2. The same math as a binarized LM layer (the TPU framework): latent
-   weights -> sign/STE train path -> packed uint32 serving path, all
+   weights -> sign/STE train path -> PackedArray serving path, all
    producing identical results.
+3. A fully-binary 3-layer MLP whose activations STAY packed between
+   layers (binarize_pack -> binary_binary_dense -> ... , no bf16
+   round-trip — the paper's keep-everything-1-bit datapath).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,11 +15,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adder_tree import make_ext_inputs, schedule_tree
-from repro.core.binarize import pack_bits
+from repro.core.binarize import PackedArray, xnor_popcount_dot
 from repro.core.bnn_layers import apply_folded, quantize_for_serving
-from repro.core.binarize import xnor_popcount_dot
 from repro.core.tulip_pe import run_numpy
 from repro.configs import get_arch, reduced
+from repro.kernels.ops import binarize_pack, binary_binary_dense
 from repro.models import init_params, loss_fn
 
 # --- 1. the ASIC: a 96-input binary neuron on one TULIP-PE ----------
@@ -42,11 +45,32 @@ gam, bet = rng.normal(size=N) + 1.5, rng.normal(size=N)
 wp, fold = quantize_for_serving(jnp.asarray(w), mu, sig, gam, bet)
 xs = jnp.where(jnp.asarray(rng.normal(size=(B, K)).astype(np.float32)) > 0,
                1.0, -1.0)
-y = apply_folded(xnor_popcount_dot(pack_bits(xs), wp, K), fold)
+y = apply_folded(xnor_popcount_dot(PackedArray.pack(xs), wp), fold)
 print(f"[framework] packed XNOR-popcount serving layer: out shape "
       f"{y.shape}, values in {set(np.unique(np.asarray(y)))} ✓")
 
-# --- 3. a whole (reduced) assigned architecture, binarized ----------
+# --- 3. fully-binary 3-layer MLP: activations stay packed -----------
+D, H, O = 256, 192, 16
+x = rng.normal(size=(8, D)).astype(np.float32)
+Ws = [rng.normal(size=(H, D)), rng.normal(size=(H, H)),
+      rng.normal(size=(O, H))]
+Wp = [PackedArray.pack(jnp.asarray(wi.astype(np.float32)), axis=-1)
+      for wi in Ws]
+hp = binarize_pack(jnp.asarray(x))                       # PackedArray
+for wi in Wp[:-1]:
+    # XNOR+popcount+threshold, output re-packed: 1 bit end-to-end
+    hp = binary_binary_dense(hp, wi, threshold=0, pack_out=True)
+    assert isinstance(hp, PackedArray)
+logits = binary_binary_dense(hp, Wp[-1])                 # int32 [8, O]
+h = np.where(x > 0, 1.0, -1.0)
+for wi in Ws[:-1]:
+    h = np.where(h @ np.where(wi > 0, 1.0, -1.0).T >= 0, 1.0, -1.0)
+ref_logits = h @ np.where(Ws[-1] > 0, 1.0, -1.0).T
+assert (np.asarray(logits) == ref_logits).all()
+print(f"[framework] 3-layer fully-binary MLP, activations packed "
+      f"between layers ({D}->{H}->{H}->{O}), == float sign-net ✓")
+
+# --- 4. a whole (reduced) assigned architecture, binarized ----------
 cfg = reduced(get_arch("mixtral-8x22b")).replace(dtype="float32")
 params = init_params(jax.random.PRNGKey(0), cfg)
 batch = {

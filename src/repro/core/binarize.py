@@ -1,10 +1,15 @@
-"""Binarization primitives: sign/STE, scaling, and int32 bit-packing.
+"""Binarization primitives: sign/STE, scaling, and bit-packing facade.
 
 This is the TPU-facing half of the paper's technique: BNN inference is
 XNOR + popcount + threshold.  On TPU we keep weights (and optionally
-activations) as +-1 values for the MXU path, or packed 32-per-int32 for
-the memory-bound path (16x less HBB traffic than bf16) — the kernels in
-repro.kernels consume the packed layout.
+activations) as +-1 values for the MXU path, or packed 32-per-uint32
+for the memory-bound path (16x less HBM traffic than bf16).
+
+The packing implementation itself lives in ONE place —
+repro.kernels.packed (pack_words / unpack_words / PackedArray); the
+pack_bits / unpack_bits / popcount_u32 names here are thin delegating
+facades kept for the historical API.  See DESIGN.md §1–§2 for the
+layout contract.
 
 Training uses the straight-through estimator of Courbariaux et al. [9]
 (the BNN formulation the paper builds on): forward sign(), backward
@@ -12,12 +17,17 @@ clipped identity on the latent full-precision weights.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.kernels.packed import (PackedArray, pack_words, popcount_u32,
+                                  unpack_words)
+
+__all__ = ["ste_sign", "binarize_weights", "pack_bits", "unpack_bits",
+           "popcount_u32", "xnor_popcount_dot", "sign_dot_reference",
+           "PackedArray"]
 
 
 # ------------------------------------------------------------------ #
@@ -54,62 +64,64 @@ def binarize_weights(w: jax.Array, per_channel_scale: bool = True,
 
 
 # ------------------------------------------------------------------ #
-# bit packing: {-1,+1} (or {0,1}) -> uint32, 32 values per word        #
+# bit packing facade — canonical impl in repro.kernels.packed          #
 # ------------------------------------------------------------------ #
 def pack_bits(x: jax.Array, axis: int = -1) -> jax.Array:
-    """Pack a +-1 (or 0/1) array into uint32 along `axis`.
-
-    Bit b of word j on the packed axis holds [x[32*j + b] > 0].
-    The packed axis length must be a multiple of 32.
-    """
-    axis = axis % x.ndim
-    n = x.shape[axis]
-    assert n % 32 == 0, f"pack axis {n} not a multiple of 32"
-    bits = (x > 0).astype(jnp.uint32)
-    x32 = jnp.moveaxis(bits, axis, -1).reshape(*bits.shape[:axis],
-                                               *bits.shape[axis + 1:],
-                                               n // 32, 32)
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    words = jnp.sum(x32 << shifts, axis=-1, dtype=jnp.uint32)
-    return jnp.moveaxis(words, -1, axis)
+    """Pack a +-1 (or 0/1) array into uint32 along `axis` (delegates to
+    kernels.packed.pack_words; a non-multiple-of-32 axis is zero-padded
+    to the word boundary, zeros packing to bit 0 == -1)."""
+    return pack_words(x, axis=axis)
 
 
 def unpack_bits(words: jax.Array, axis: int = -1,
                 dtype=jnp.bfloat16) -> jax.Array:
-    """Inverse of pack_bits: uint32 -> +-1 values of `dtype`."""
-    axis = axis % words.ndim
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    w = jnp.moveaxis(words, axis, -1)
-    bits = (w[..., None] >> shifts) & jnp.uint32(1)
-    vals = (2.0 * bits.astype(jnp.float32) - 1.0).astype(dtype)
-    vals = vals.reshape(*w.shape[:-1], w.shape[-1] * 32)
-    return jnp.moveaxis(vals, -1, axis)
+    """Inverse of pack_bits: uint32 -> +-1 values of `dtype` (delegates
+    to kernels.packed.unpack_words)."""
+    return unpack_words(words, axis=axis, dtype=dtype)
 
 
-def popcount_u32(x: jax.Array) -> jax.Array:
-    """SWAR popcount per uint32 lane (the VPU translation of the paper's
-    adder tree: log-depth bit-slice accumulation instead of a ripple of
-    full adders)."""
-    x = x.astype(jnp.uint32)
-    x = x - ((x >> 1) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
-    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
-
-
-def xnor_popcount_dot(xp: jax.Array, wp: jax.Array, n: int) -> jax.Array:
+# ------------------------------------------------------------------ #
+# packed binary dot                                                    #
+# ------------------------------------------------------------------ #
+def xnor_popcount_dot(xp: Union[PackedArray, jax.Array],
+                      wp: Union[PackedArray, jax.Array],
+                      n: Optional[int] = None) -> jax.Array:
     """Binary dot product from packed operands.
 
-    xp: [..., K/32] uint32, wp: [N, K/32] uint32 (row-major packed).
-    Returns [..., N] int32 equal to sum(sign_x * sign_w) over the K axis:
-        dot = 2 * popcount(XNOR(x, w)) - K    (restricted to n valid bits)
-    Zero-padded tail bits (both operands 0) XNOR to 1 and are subtracted:
-        pc_valid = pc - (K_packed - n);  dot = 2 * pc_valid - n.
+    xp: [..., K/32] and wp: [N, K/32], as PackedArray (n inferred from
+    the logical length) or raw uint32 words (explicit n required).
+    Returns [..., N] int32 equal to sum(sign_x * sign_w) over the K
+    axis via   dot = 2 * popcount(XNOR(x, w)) - K   restricted to the n
+    valid bits: zero-padded tail bits (0 on both operands) XNOR to 1
+    and are subtracted through   pc_valid = pc - (K_packed - n).
+    Operands with different word *counts* are zero-padded to a common
+    width (the same correction absorbs it); different logical lengths
+    are a contraction mismatch and raise.
     """
-    xnor = ~(xp[..., None, :] ^ wp)           # [..., N, K/32]
+    lengths = [a.length for a in (xp, wp) if isinstance(a, PackedArray)]
+    if n is not None:
+        lengths.append(n)
+    if len(set(lengths)) > 1:
+        raise ValueError(f"contraction length mismatch: {lengths}")
+    n = lengths[0] if lengths else None
+    if isinstance(xp, PackedArray):
+        xp = xp.move_pack_axis_last().words
+    if isinstance(wp, PackedArray):
+        wp = wp.move_pack_axis_last().words
+    if n is None:
+        raise ValueError("n is required with raw packed words")
+    kw = max(xp.shape[-1], wp.shape[-1])
+
+    def pad(a):
+        if a.shape[-1] == kw:
+            return a
+        pads = [(0, 0)] * a.ndim
+        pads[-1] = (0, kw - a.shape[-1])
+        return jnp.pad(a, pads)
+
+    xnor = ~(pad(xp)[..., None, :] ^ pad(wp))     # [..., N, K/32]
     pc = popcount_u32(xnor).sum(axis=-1)
-    k_packed = 32 * xp.shape[-1]
-    return 2 * (pc - (k_packed - n)) - n
+    return 2 * (pc - (32 * kw - n)) - n
 
 
 def sign_dot_reference(x: jax.Array, w: jax.Array) -> jax.Array:

@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.binarize import (binarize_weights, pack_bits, ste_sign,
-                                 unpack_bits, xnor_popcount_dot)
+from repro.core.binarize import (PackedArray, binarize_weights, ste_sign,
+                                 xnor_popcount_dot)
 
 
 class FoldedThreshold(NamedTuple):
@@ -77,9 +77,11 @@ def bnn_dense_train(x, w, mu, sigma, gamma, beta,
     return ste_sign(y)
 
 
-def bnn_dense_serve_folded(xp, wp, fold: FoldedThreshold, n: int):
+def bnn_dense_serve_folded(xp, wp, fold: FoldedThreshold,
+                           n: Optional[int] = None):
     """Inference path: packed XNOR-popcount + integer threshold.
-    xp: [..., K/32] uint32, wp: [N, K/32] uint32."""
+    xp, wp: PackedArray (n inferred) or raw uint32 words + explicit n;
+    wp rows are output channels ([N, K] packed over K)."""
     s = xnor_popcount_dot(xp, wp, n)
     return apply_folded(s, fold)
 
@@ -89,14 +91,13 @@ def quantize_for_serving(w, mu, sigma, gamma, beta, eps: float = 1e-5):
 
     alpha (per-channel positive scale) passes through the sign, so the
     fold absorbs it into BN's statistics: BN(alpha*s) >= 0 folds with
-    mu/alpha etc.  Returns (wp packed uint32 [N, K/32], fold)."""
+    mu/alpha etc.  Returns (PackedArray [N, K] packed over K — the
+    canonical packer zero-pads odd K, i.e. pads with -1 bits that the
+    logical length masks out — and the folded threshold)."""
     n = w.shape[1]
-    pad = (-n) % 32
     wb = jnp.where(w > 0, 1.0, -1.0)
     alpha = jnp.mean(jnp.abs(w), axis=1)
-    if pad:
-        wb = jnp.pad(wb, ((0, 0), (0, pad)), constant_values=-1.0)
-    wp = pack_bits(wb, axis=1)
+    wp = PackedArray.pack(wb, axis=1)
     a = jnp.where(alpha == 0, 1e-12, alpha)
     sd = jnp.sqrt(jnp.asarray(sigma, jnp.float32) ** 2 + eps)
     fold = fold_bn_threshold(jnp.asarray(mu) / a, sd / a,

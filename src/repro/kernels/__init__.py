@@ -1,13 +1,19 @@
 """Pallas TPU kernels for the paper's compute hot-spot: binarized GEMM.
 
+  packed.py         PackedArray pytree (THE canonical 1-bit layout) +
+                    the backend registry (padding/blocking policy)
   xnor_gemm.py      packed weights -> unpack-in-VMEM -> MXU dot
   popcount_gemm.py  both operands packed -> VPU SWAR-popcount adder tree
   pack.py           sign + bit-pack activations
-  ops.py            jit wrappers (pallas | interpret | xla dispatch)
+  ops.py            jit wrappers (pallas | interpret | xla dispatch
+                    through the registry)
   ref.py            pure-jnp oracles (the allclose targets)
 """
 from repro.kernels.ops import (binarize_pack, binary_binary_dense,
                                binary_dense, default_backend)
+from repro.kernels.packed import (BackendSpec, PackedArray, get_backend,
+                                  register_backend)
 
-__all__ = ["binarize_pack", "binary_binary_dense", "binary_dense",
-           "default_backend"]
+__all__ = ["BackendSpec", "PackedArray", "binarize_pack",
+           "binary_binary_dense", "binary_dense", "default_backend",
+           "get_backend", "register_backend"]

@@ -1,84 +1,163 @@
 """Jit'd public wrappers for the binarized-compute kernels.
 
-Dispatch policy (`backend`):
+Dispatch goes through the backend registry (kernels.packed): a
+BackendSpec owns the padding/blocking policy, and the wrappers here
+normalize PackedArray operands, flatten leading dims, pad M / N / K to
+the spec, run the kernel (or the jnp oracle for "xla"), and slice the
+logical result back out.  Both GEMMs accept legacy raw-uint32 operands
+for callers that manage their own layout.
+
+Backends (see kernels.packed.register_backend):
   "pallas"     real TPU lowering (pl.pallas_call, compiled)
   "interpret"  Pallas interpret mode — kernel body runs on CPU; used by
                the test suite for bit-exact validation vs ref.py
-  "xla"        pure-jnp fallback (ref.py) — used on hosts without Pallas
+  "xla"        pure-jnp fallback (ref.py) — hosts without Pallas
 Default: pallas on TPU, xla elsewhere.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.pack import pack as _pack_kernel
+from repro.kernels.packed import (PackedArray, default_backend, get_backend)
 from repro.kernels.popcount_gemm import popcount_gemm as _pop_kernel
 from repro.kernels.xnor_gemm import xnor_gemm as _xnor_kernel
 
+__all__ = ["binarize_pack", "binary_binary_dense", "binary_dense",
+           "default_backend"]
 
-def default_backend() -> str:
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
+Packable = Union[PackedArray, jax.Array]
 
 
-def _pad_to(x, m, axis):
-    r = (-x.shape[axis]) % m
-    if r == 0:
-        return x, 0
+def _pad_dim(x: jax.Array, target: int, axis: int) -> jax.Array:
+    if x.shape[axis] == target:
+        return x
     pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, r)
-    return jnp.pad(x, pads), r
+    pads[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pads)
 
 
-def binary_dense(x: jax.Array, wp: jax.Array, alpha: jax.Array,
+def _adopt_rows(a: Packable, k: Optional[int]) -> PackedArray:
+    """Normalize to the row-major packed layout ([..., K/32], axis -1)."""
+    if isinstance(a, PackedArray):
+        if k is not None and a.length != k:
+            raise ValueError(f"explicit k={k} disagrees with "
+                             f"PackedArray.length={a.length}")
+        return a.move_pack_axis_last()
+    if k is None:
+        raise ValueError("raw packed words need an explicit k")
+    return PackedArray(jnp.asarray(a), length=k, axis=-1)
+
+
+def binarize_pack(x: jax.Array,
+                  backend: Optional[str] = None) -> PackedArray:
+    """sign+pack along the last axis -> PackedArray (length=x.shape[-1]).
+
+    Any length is accepted; the backend pads to its word/block multiple
+    and the PackedArray records the logical length."""
+    be = get_backend(backend)
+    if not be.uses_kernels:
+        return PackedArray.pack(x, axis=-1)
+    lead, K = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    Mp, Kp = be.pad_m(M), be.pad_k(K)
+    x2 = _pad_dim(_pad_dim(x2, Kp, 1), Mp, 0)
+    # slice block padding back off: output words are bit-identical to
+    # the canonical packer on every backend
+    nw = (K + 31) // 32
+    words = _pack_kernel(x2, interpret=be.interpret)[:M, :nw]
+    return PackedArray(words.reshape(*lead, nw), length=K, axis=-1)
+
+
+def binary_dense(x: jax.Array, wp: Packable, alpha: jax.Array,
                  threshold: Optional[float] = None,
                  backend: Optional[str] = None) -> jax.Array:
-    """Binary-weight dense layer: [.., K] x packed [K/32, N] -> [.., N]."""
-    backend = backend or default_backend()
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if backend == "xla":
-        y = ref.xnor_gemm_ref(x2, wp, alpha, threshold).astype(x.dtype)
-    else:
-        x2p, pm = _pad_to(x2, 128, 0)
-        y = _xnor_kernel(x2p, wp, alpha, threshold=threshold,
-                         interpret=(backend == "interpret"))
-        if pm:
-            y = y[:x2.shape[0]]
-    return y.reshape(*lead, -1)
+    """Binary-weight dense: x [..., K] float x packed weights -> [.., N].
+
+    wp: PackedArray packed over K in [K, N] orientation (words
+    [K/32, N], pack axis -2) or legacy raw uint32 [K/32, N].
+    Output is x.dtype; with `threshold`, {-1,+1} in x.dtype on every
+    backend (fused in-kernel on pallas, post-hoc in the oracle).
+    """
+    if not isinstance(wp, PackedArray):
+        wp = PackedArray(jnp.asarray(wp), length=x.shape[-1], axis=-2)
+    if wp.axis != -2:
+        raise ValueError(f"binary_dense wants weights packed over K in "
+                         f"[K, N] orientation (axis -2), got {wp.axis}")
+    if wp.length != x.shape[-1]:
+        raise ValueError(f"x K={x.shape[-1]} vs packed K={wp.length}")
+    be = get_backend(backend)
+    lead, K = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, K)
+    M, N = x2.shape[0], wp.words.shape[-1]
+    if not be.uses_kernels:
+        # pad x with zeros to the word boundary: 0 * (pad weight) == 0
+        x2p = _pad_dim(x2, wp.padded_length, 1)
+        y = ref.xnor_gemm_ref(x2p, wp.words, alpha,
+                              threshold).astype(x.dtype)
+        return y.reshape(*lead, N)
+    wpad = wp.pad_to(be.pad_k(wp.padded_length))
+    Mp, Np = be.pad_m(M), be.pad_n(N)
+    x2p = _pad_dim(_pad_dim(x2, wpad.padded_length, 1), Mp, 0)
+    words = _pad_dim(wpad.words, Np, 1)
+    al = _pad_dim(alpha.reshape(-1), Np, 0)
+    y = _xnor_kernel(x2p, words, al, threshold=threshold,
+                     interpret=be.interpret)[:M, :N]
+    return y.reshape(*lead, N)
 
 
-def binary_binary_dense(xp: jax.Array, wp: jax.Array, k: int,
+def binary_binary_dense(xp: Packable, wp: Packable, k: Optional[int] = None,
                         threshold: Optional[int] = None,
-                        backend: Optional[str] = None) -> jax.Array:
-    """Fully-binary dense: packed acts x packed weights -> int32 dot."""
-    backend = backend or default_backend()
-    lead = xp.shape[:-1]
-    x2 = xp.reshape(-1, xp.shape[-1])
-    if backend == "xla":
-        y = ref.popcount_gemm_ref(x2, wp, k)
-    else:
-        x2p, pm = _pad_to(x2, 128, 0)
-        y = _pop_kernel(x2p, wp, k, threshold=threshold,
-                        interpret=(backend == "interpret"))
-        if pm:
-            y = y[:x2.shape[0]]
-        return y.reshape(*lead, -1)
-    if threshold is not None:
-        y = jnp.where(y >= threshold, 1, -1)
-    return y.reshape(*lead, -1)
+                        backend: Optional[str] = None,
+                        pack_out: bool = False):
+    """Fully-binary dense: packed acts x packed weights -> int32 dot.
 
+    xp: PackedArray [..., K] packed on the last axis (or raw uint32
+        [..., K/32] with explicit k); wp: PackedArray [N, K] packed on
+        the last axis (or raw uint32 [N, K/32]).
 
-def binarize_pack(x: jax.Array, backend: Optional[str] = None) -> jax.Array:
-    """sign+pack along the last axis."""
-    backend = backend or default_backend()
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if backend == "xla":
-        y = ref.pack_ref(x2)
+    threshold: integer dot threshold — the output becomes {-1,+1} int32
+    on EVERY backend (fused in-kernel on pallas/interpret, post-hoc on
+    xla; bit-identical, see tests/test_packed.py).
+
+    pack_out: with threshold, re-pack the {-1,+1} output into a
+    PackedArray so the next binary layer consumes it directly — a
+    fully-binary MLP chains binarize_pack -> binary_binary_dense ->
+    ... without ever unpacking to bf16.
+    """
+    if pack_out and threshold is None:
+        raise ValueError("pack_out requires a threshold (binary output)")
+    xp = _adopt_rows(xp, k)
+    wp = _adopt_rows(wp, k)
+    if xp.length != wp.length:
+        raise ValueError(f"contraction length mismatch: xp K={xp.length} "
+                         f"vs wp K={wp.length}")
+    k = xp.length
+    be = get_backend(backend)
+    # align both operands to a common padded K (zero words on both
+    # sides cancel via the closed form in the kernel/oracle)
+    nbits = 32 * max(xp.n_words, wp.n_words)
+    if be.uses_kernels:
+        nbits = be.pad_k(nbits)
+    xp, wp = xp.pad_to(nbits), wp.pad_to(nbits)
+    lead = xp.words.shape[:-1]
+    x2 = xp.words.reshape(-1, xp.n_words)
+    M, N = x2.shape[0], wp.words.shape[0]
+    if be.uses_kernels:
+        x2p = _pad_dim(x2, be.pad_m(M), 0)
+        w2p = _pad_dim(wp.words, be.pad_n(N), 0)
+        y = _pop_kernel(x2p, w2p, k, threshold=threshold,
+                        interpret=be.interpret)[:M, :N]
     else:
-        y = _pack_kernel(x2, interpret=(backend == "interpret"))
-    return y.reshape(*lead, -1)
+        y = ref.popcount_gemm_ref(x2, wp.words, k)
+        if threshold is not None:
+            y = jnp.where(y >= threshold, 1, -1).astype(jnp.int32)
+    y = y.reshape(*lead, N)
+    if pack_out:
+        return binarize_pack(y, backend=backend)
+    return y

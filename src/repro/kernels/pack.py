@@ -2,7 +2,10 @@
 
 sign(x) packed 32-per-uint32 along the last axis — the producer side of
 popcount_gemm.  Grid (M/bm, K/bk); each block reduces 32 consecutive
-lanes into one packed word via shift-or.
+lanes into one packed word via shift-or.  Same bit layout as the
+canonical jnp packer in kernels.packed (validated against it in
+tests); default blocks match the registry's pad policy (m_align=128,
+k_align=512) so dispatch-padded shapes always tile.
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ def _kernel(x_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
-def pack(x: jax.Array, bm: int = 256, bk: int = 1024,
+def pack(x: jax.Array, bm: int = 128, bk: int = 512,
          interpret: bool = False) -> jax.Array:
     """x: [M, K] (K % 32 == 0) -> uint32 [M, K//32]."""
     M, K = x.shape

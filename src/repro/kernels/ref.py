@@ -1,10 +1,15 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets).
+
+The oracles build on the canonical pack/unpack/popcount primitives in
+kernels.packed — there is exactly one packing implementation in the
+tree (plus its Pallas twin in kernels/pack.py, validated against it).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.binarize import (pack_bits, popcount_u32, unpack_bits)
+from repro.kernels.packed import pack_words, popcount_u32, unpack_words
 
 
 def xnor_gemm_ref(x: jax.Array, wp: jax.Array, alpha: jax.Array,
@@ -12,7 +17,7 @@ def xnor_gemm_ref(x: jax.Array, wp: jax.Array, alpha: jax.Array,
     """x: [M,K] float; wp: [K/32, N] uint32 packed over K; alpha: [N].
 
     y = (x @ unpack(wp)) * alpha, optionally sign(y - threshold)."""
-    w = unpack_bits(wp, axis=0, dtype=jnp.float32)      # [K, N] +-1
+    w = unpack_words(wp, axis=0, dtype=jnp.float32)     # [K, N] +-1
     y = x.astype(jnp.float32) @ w * alpha.astype(jnp.float32)
     if threshold is not None:
         y = jnp.where(y >= threshold, 1.0, -1.0)
@@ -30,5 +35,5 @@ def popcount_gemm_ref(xp: jax.Array, wp: jax.Array, k: int) -> jax.Array:
 
 
 def pack_ref(x: jax.Array) -> jax.Array:
-    """x: [M, K] (K % 32 == 0) -> [M, K/32] uint32."""
-    return pack_bits(x, axis=-1)
+    """x: [M, K] -> [M, ceil(K/32)] uint32 (the canonical packer)."""
+    return pack_words(x, axis=-1)

@@ -1,6 +1,12 @@
 """Batched serving loop: continuous-batching-lite over a jitted
 prefill + decode_step, with optional TULIP-packed weights.
 
+With packed=True the Engine holds the packed parameter tree *natively*:
+every binarizable projection is a PackedArray pytree leaf-bundle
+(uint32 words + static layout metadata) that flows straight through
+jax.jit into prefill/decode — no unpack-on-load, ~16x less weight HBM
+traffic at decode (kernels.packed, DESIGN.md §2–§3).
+
 Requests enter a queue; slots in the fixed decode batch are assigned as
 they free up (each slot tracks its own `step`, so sequences of
 different lengths coexist in one decode batch — the per-slot position
@@ -21,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
+from repro.kernels.packed import tree_nbytes
 from repro.models import model as M
 from repro.models.quantize import pack_model_params
 
@@ -40,7 +47,9 @@ class Engine:
     def __init__(self, cfg, params, batch_slots: int, capacity: int,
                  packed: bool = False, greedy: bool = True):
         self.cfg = cfg
+        self.packed = packed
         self.params = pack_model_params(params) if packed else params
+        self.param_bytes = tree_nbytes(self.params)
         self.B = batch_slots
         self.capacity = capacity
         self.greedy = greedy
@@ -96,7 +105,9 @@ class Engine:
         total = sum(len(r.out) for r in requests)
         log(f"served {len(requests)} requests / {total} tokens in "
             f"{n_steps} engine steps, {dt:.2f}s "
-            f"({total / max(dt, 1e-9):.1f} tok/s)")
+            f"({total / max(dt, 1e-9):.1f} tok/s); params "
+            f"{self.param_bytes / 1e6:.1f} MB "
+            f"({'packed' if self.packed else 'dense'})")
         return requests
 
 

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.binarize import ste_sign, unpack_bits
+from repro.kernels import ops as kops
+from repro.kernels.packed import PackedArray
 from repro.runtime.sharding import shard_act
 
 
@@ -43,13 +45,12 @@ def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
 
 
 def pack_dense_params(p: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    """Offline transform: latent weights -> packed serving layout."""
-    from repro.core.binarize import pack_bits
+    """Offline transform: latent weights -> packed serving layout
+    (wp is a PackedArray over the K axis; odd K pads to the word
+    boundary, masked out by the logical length)."""
     w = p["w"]
-    k = w.shape[0]
-    assert k % 32 == 0, "pack path requires K % 32 == 0"
     alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0)
-    out = {"wp": pack_bits(jnp.where(w > 0, 1.0, -1.0), axis=0),
+    out = {"wp": PackedArray.pack(w, axis=0),
            "alpha": alpha.astype(w.dtype)}
     if "b" in p:
         out["b"] = p["b"]
@@ -68,11 +69,27 @@ def wparams(p: Dict[str, jax.Array], name: str,
     return d
 
 
-def dense(p: Dict[str, jax.Array], x: jax.Array, mode: str = "none",
+def dense(p: Dict[str, jax.Array], x, mode: str = "none",
           binarized: bool = True) -> jax.Array:
-    """Apply a (possibly binarized, possibly packed) linear layer."""
-    if "wp" in p:  # packed serving layout (TULIP path)
-        w = unpack_bits(p["wp"], axis=0, dtype=x.dtype) * p["alpha"]
+    """Apply a (possibly binarized, possibly packed) linear layer.
+
+    x may itself be a PackedArray (fully-binary path): the GEMM then
+    runs packed x packed -> int32 through the popcount kernel and is
+    scaled by alpha — activations never round-trip through bf16
+    (DESIGN.md §3).  Use packed_dense() for hidden layers that should
+    *stay* packed."""
+    wp = p.get("wp")
+    if isinstance(x, PackedArray):
+        if not isinstance(wp, PackedArray):
+            raise ValueError("packed activations require packed weights "
+                             "(run pack_dense_params first)")
+        s = kops.binary_binary_dense(x, wp.move_pack_axis_last())
+        y = s.astype(p["alpha"].dtype) * p["alpha"]
+    elif isinstance(wp, PackedArray):  # packed serving layout (TULIP)
+        w = wp.unpack(x.dtype) * p["alpha"]
+        y = x @ w
+    elif wp is not None:  # legacy raw uint32 [K/32, N] words
+        w = unpack_bits(wp, axis=0, dtype=x.dtype) * p["alpha"]
         y = x @ w
     elif mode == "none" or not binarized:
         y = x @ p["w"]
@@ -87,6 +104,18 @@ def dense(p: Dict[str, jax.Array], x: jax.Array, mode: str = "none",
     if "b" in p:
         y = y + p["b"]
     return y
+
+
+def packed_dense(p: Dict[str, jax.Array], xp: PackedArray, threshold: int,
+                 backend: Optional[str] = None) -> PackedArray:
+    """Hidden layer of a fully-binary stack: PackedArray -> PackedArray.
+
+    XNOR + popcount + integer threshold, output re-packed, so a binary
+    MLP chains  binarize_pack -> packed_dense -> ... -> dense  with the
+    activations staying 1-bit between layers (no bf16 unpack)."""
+    return kops.binary_binary_dense(xp, p["wp"].move_pack_axis_last(),
+                                    threshold=threshold, pack_out=True,
+                                    backend=backend)
 
 
 # ------------------------------------------------------------------ #

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.binarize import ste_sign, unpack_bits
+from repro.kernels.packed import PackedArray
 from repro.models.layers import act_fn, dtype_of
 from repro.runtime.sharding import shard_act
 
@@ -43,7 +44,11 @@ def moe_init(key, cfg) -> Dict[str, Any]:
 def _get_w(p, name, mode, dtype):
     """Dense latent weights (train) or packed serving layout."""
     if name + "_p" in p:
-        w = unpack_bits(p[name + "_p"], axis=1, dtype=dtype)
+        wp = p[name + "_p"]
+        if isinstance(wp, PackedArray):
+            w = wp.unpack(dtype)              # [E, K, F], pack axis -2
+        else:                                 # legacy raw uint32 words
+            w = unpack_bits(wp, axis=1, dtype=dtype)
         return w * p[name + "_alpha"].astype(dtype)
     return _maybe_bin(p[name], mode)
 

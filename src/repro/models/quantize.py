@@ -1,11 +1,17 @@
 """Offline weight packing: latent bf16 weights -> TULIP serving layout.
 
 Rewrites the parameter tree so every binarizable projection is stored
-as {name}_p (uint32, 32 weights/word over the input dim) + {name}_alpha
-(per-output-channel XNOR-Net scale).  `dense()`/`moe_apply` dispatch on
-the packed keys, so the same model code serves both layouts; HBM weight
-traffic drops 16x vs bf16 — the decode-cell memory-roofline lever
-(EXPERIMENTS.md §Perf).
+as {name}_p (a PackedArray: uint32 words, 32 weights/word over the
+input dim, logical length + pack axis carried as static pytree
+metadata) + {name}_alpha (per-output-channel XNOR-Net scale).
+`dense()`/`moe_apply` dispatch on the packed keys, so the same model
+code serves both layouts; HBM weight traffic drops 16x vs bf16 — the
+decode-cell memory-roofline lever (EXPERIMENTS.md §Perf).
+
+The pack axis is stored negative inside PackedArray, so the vmap over
+scan-stacked layer parameters below (which prepends an [n_cycles] dim
+to the words) leaves the metadata valid.  Sharding rules match the
+words leaf through its `/words` path suffix (runtime.sharding).
 
 Works on concrete arrays *and* under jax.eval_shape (the dry-run packs
 abstract parameters).
@@ -17,7 +23,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.binarize import pack_bits
+from repro.kernels.packed import PackedArray
 
 # 2-D weights packed over axis 0 (input dim); selected by key name
 _PACK2D = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
@@ -28,14 +34,14 @@ _PACK3D = {"w_gate", "w_up", "w_down"}
 
 def _pack2d(w: jax.Array):
     alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0).astype(w.dtype)
-    wp = pack_bits(jnp.where(w > 0, 1.0, -1.0).astype(jnp.float32), axis=0)
+    wp = PackedArray.pack(w, axis=0)          # bit = [w > 0], axis -> -2
     return wp, alpha
 
 
 def _pack3d(w: jax.Array):
     alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=1,
                      keepdims=True).astype(w.dtype)
-    wp = pack_bits(jnp.where(w > 0, 1.0, -1.0).astype(jnp.float32), axis=1)
+    wp = PackedArray.pack(w, axis=1)          # [E, K/32, N], axis -> -2
     return wp, alpha
 
 

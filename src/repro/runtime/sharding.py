@@ -68,40 +68,43 @@ def shard_act(x: jax.Array, want: Sequence[Any]) -> jax.Array:
 # ------------------------------------------------------------------ #
 # rules matched against the '/'-joined param path; first match wins.
 # specs are *logical*: "model" = TP axis, "fsdp" = the data axis reused
-# for ZeRO-3 parameter sharding.
+# for ZeRO-3 parameter sharding.  Packed projections are PackedArray
+# pytree nodes whose words leaf flattens to a ".../{name}_p/words"
+# path — the optional (/words)? suffix lets the same rule shard the
+# words (same rank as the latent weight, K replaced by K/32).
 _RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
     # embeddings / logits: vocab on model, d_model on fsdp
     (r"embed|lm_head",                 ("model", "fsdp")),
     (r"pos_emb",                       (None, "fsdp")),
     # attention projections (leading layer-stack dim handled separately)
-    (r"attn/(wq|wk|wv)(_p)?$",         ("fsdp", "model")),
+    (r"attn/(wq|wk|wv)(_p)?(/words)?$", ("fsdp", "model")),
     (r"attn/(bq|bk|bv)$",              ("model",)),
-    (r"attn/wo(_p)?$",                 ("model", "fsdp")),
+    (r"attn/wo(_p)?(/words)?$",        ("model", "fsdp")),
     (r"_alpha$",                       (None,)),
     (r"attn/bo$",                      (None,)),
     # MoE: experts on fsdp when divisible, d_ff on model
     (r"moe/router$",                   ("fsdp", None)),
-    (r"moe/(w_gate|w_up)(_p)?$",       ("fsdp", None, "model")),
-    (r"moe/w_down(_p)?$",              ("fsdp", "model", None)),
+    (r"moe/(w_gate|w_up)(_p)?(/words)?$", ("fsdp", None, "model")),
+    (r"moe/w_down(_p)?(/words)?$",     ("fsdp", "model", None)),
     # dense FFN
-    (r"mlp/(w_gate|w_up)(_p)?$",       ("fsdp", "model")),
-    (r"mlp/w_down(_p)?$",              ("model", "fsdp")),
+    (r"mlp/(w_gate|w_up)(_p)?(/words)?$", ("fsdp", "model")),
+    (r"mlp/w_down(_p)?(/words)?$",     ("model", "fsdp")),
     (r"mlp/(b_gate|b_up)$",            ("model",)),
     (r"mlp/b_down$",                   (None,)),
     # mamba
-    (r"ssm/in_proj(_p)?$",             ("fsdp", "model")),
+    (r"ssm/in_proj(_p)?(/words)?$",    ("fsdp", "model")),
     (r"ssm/conv_w$",                   ("model", None)),
     (r"ssm/conv_b$",                   ("model",)),
     (r"ssm/x_proj$",                   ("model", None)),
     (r"ssm/dt_proj$",                  (None, "model")),
     (r"ssm/dt_bias$",                  ("model",)),
     (r"ssm/(A_log|D)$",                ("model", None)),
-    (r"ssm/out_proj(_p)?$",            ("model", "fsdp")),
+    (r"ssm/out_proj(_p)?(/words)?$",   ("model", "fsdp")),
     # rg-lru
-    (r"lru/(in_proj|gate_proj)(_p)?$", ("fsdp", "model")),
+    (r"lru/(in_proj|gate_proj)(_p)?(/words)?$", ("fsdp", "model")),
     (r"lru/conv_w$",                   ("model", None)),
     (r"lru/(a_param|conv_b|in_bias|gate_bias)$", ("model",)),
-    (r"lru/out_proj(_p)?$",            ("model", "fsdp")),
+    (r"lru/out_proj(_p)?(/words)?$",   ("model", "fsdp")),
     # norms, scales, biases: replicate (small)
     (r"norm|scale|bias",               (None,)),
 )
@@ -167,6 +170,8 @@ def _key_str(k) -> str:
         return str(k.key)
     if hasattr(k, "idx"):
         return str(k.idx)
+    if hasattr(k, "name"):      # GetAttrKey (e.g. PackedArray.words)
+        return str(k.name)
     return str(k)
 
 

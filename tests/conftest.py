@@ -1,0 +1,27 @@
+"""Shared test helpers.
+
+hypothesis is an optional test extra (pyproject [project.optional-
+dependencies] test): when absent, the fake `given`/`settings`/`st`
+exported here make property tests self-skip instead of failing
+collection.  Test modules import these via `from conftest import ...`
+(pytest puts the tests dir on sys.path for rootdir-style collection).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _St:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _St()
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*a, **k):
+        return lambda fn: fn

@@ -3,11 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or self-skip shim
 
-from repro.core.binarize import (binarize_weights, pack_bits, popcount_u32,
-                                 sign_dot_reference, ste_sign, unpack_bits,
-                                 xnor_popcount_dot)
+from repro.core.binarize import (PackedArray, binarize_weights, pack_bits,
+                                 popcount_u32, sign_dot_reference, ste_sign,
+                                 unpack_bits, xnor_popcount_dot)
 from repro.core.bnn_layers import (apply_folded, bn_reference,
                                    bnn_dense_train, fold_bn_threshold,
                                    quantize_for_serving)
@@ -101,10 +101,22 @@ def test_quantize_for_serving_matches_train_path():
     y_train = bnn_dense_train(jnp.asarray(x), jnp.asarray(w), mu, sigma,
                               gamma, beta)
     wp, fold = quantize_for_serving(jnp.asarray(w), mu, sigma, gamma, beta)
+    assert isinstance(wp, PackedArray) and wp.length == K
     xs = jnp.where(jnp.asarray(x) > 0, 1.0, -1.0)
-    xp = pack_bits(xs, axis=-1)
-    y_serve = apply_folded(xnor_popcount_dot(xp, wp, K), fold)
+    xp = PackedArray.pack(xs, axis=-1)
+    y_serve = apply_folded(xnor_popcount_dot(xp, wp), fold)
     np.testing.assert_array_equal(np.asarray(y_train), np.asarray(y_serve))
+
+
+def test_xnor_popcount_dot_length_mismatch_raises():
+    """Differing logical lengths are a contraction error, not silent
+    pad-bit garbage (same contract as ops.binary_binary_dense)."""
+    xp = PackedArray.pack(jnp.ones((2, 64)))
+    wp = PackedArray.pack(jnp.ones((3, 50)))
+    with pytest.raises(ValueError, match="length mismatch"):
+        xnor_popcount_dot(xp, wp)
+    with pytest.raises(ValueError, match="length mismatch"):
+        xnor_popcount_dot(xp, PackedArray.pack(jnp.ones((3, 64))), n=50)
 
 
 def test_binarize_weights_scale():

@@ -4,12 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or self-skip shim
 
 from repro.core.binarize import pack_bits
 from repro.kernels import ref
 from repro.kernels.ops import binarize_pack, binary_binary_dense, binary_dense
 from repro.kernels.pack import pack as pack_kernel
+from repro.kernels.packed import PackedArray
 from repro.kernels.popcount_gemm import popcount_gemm
 from repro.kernels.xnor_gemm import xnor_gemm
 
@@ -94,17 +95,62 @@ def test_property_popcount_equals_float_dot(mw, kw, seed):
                                   (xs @ ws.T).astype(np.int32))
 
 
+@pytest.mark.parametrize("threshold", [None, 0, 4])
+def test_binary_binary_dense_backend_equivalence(threshold):
+    """The former backend asymmetry: threshold fused in-kernel (pallas/
+    interpret) vs applied post-hoc (xla) must yield the SAME int32
+    {-1,+1} output — checked on deliberately unaligned shapes so the
+    registry's M/N/K auto-padding is exercised on both sides."""
+    rng = np.random.default_rng(threshold or 17)
+    m, k, n = 37, 50, 20
+    xs = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+    ws = rng.choice([-1.0, 1.0], size=(n, k)).astype(np.float32)
+    xp = PackedArray.pack(jnp.asarray(xs))
+    wp = PackedArray.pack(jnp.asarray(ws))
+    y_x = binary_binary_dense(xp, wp, threshold=threshold, backend="xla")
+    y_i = binary_binary_dense(xp, wp, threshold=threshold,
+                              backend="interpret")
+    assert y_x.dtype == y_i.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(y_x), np.asarray(y_i))
+    want = (xs @ ws.T).astype(np.int32)
+    if threshold is not None:
+        want = np.where(want >= threshold, 1, -1)
+    np.testing.assert_array_equal(np.asarray(y_x), want)
+
+
 def test_ops_wrappers_pad_and_reshape():
-    """binary_dense handles non-128 leading dims and 3D inputs."""
+    """The dispatch wrappers auto-pad M, N *and* K to the backend's
+    block multiples and slice the logical result back out."""
     rng = np.random.default_rng(11)
-    x = jnp.asarray(rng.normal(size=(3, 37, 128)).astype(np.float32))
-    w = rng.choice([-1.0, 1.0], size=(128, 128)).astype(np.float32)
-    wp = pack_bits(jnp.asarray(w), axis=0)
-    alpha = jnp.ones((128,), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(3, 37, 544)).astype(np.float32))
+    w = rng.choice([-1.0, 1.0], size=(544, 200)).astype(np.float32)
+    wp = PackedArray.pack(jnp.asarray(w), axis=0)
+    alpha = jnp.ones((200,), jnp.float32)
     got_i = binary_dense(x, wp, alpha, backend="interpret")
     got_x = binary_dense(x, wp, alpha, backend="xla")
+    assert got_i.shape == (3, 37, 200)
     np.testing.assert_allclose(np.asarray(got_i), np.asarray(got_x),
                                rtol=1e-5, atol=1e-4)
     p = binarize_pack(x, backend="interpret")
     p2 = binarize_pack(x, backend="xla")
-    np.testing.assert_array_equal(np.asarray(p), np.asarray(p2))
+    assert isinstance(p, PackedArray) and isinstance(p2, PackedArray)
+    assert p.length == p2.length == 544
+    np.testing.assert_array_equal(np.asarray(p.words), np.asarray(p2.words))
+
+
+def test_ops_accept_legacy_raw_words():
+    """Raw uint32 operands (+ explicit k) still dispatch correctly."""
+    rng = np.random.default_rng(23)
+    m, k, n = 16, 96, 8
+    xs = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+    ws = rng.choice([-1.0, 1.0], size=(n, k)).astype(np.float32)
+    xp = pack_bits(jnp.asarray(xs), axis=-1)
+    wp = pack_bits(jnp.asarray(ws), axis=-1)
+    got = binary_binary_dense(xp, wp, k=k, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  (xs @ ws.T).astype(np.int32))
+    w2 = rng.choice([-1.0, 1.0], size=(k, n)).astype(np.float32)
+    wp2 = pack_bits(jnp.asarray(w2), axis=0)          # raw [K/32, N]
+    alpha = jnp.ones((n,), jnp.float32)
+    got2 = binary_dense(jnp.asarray(xs), wp2, alpha, backend="xla")
+    np.testing.assert_allclose(np.asarray(got2), xs @ w2, rtol=1e-5)
