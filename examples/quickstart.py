@@ -62,6 +62,11 @@ for wi in Wp[:-1]:
     hp = binary_binary_dense(hp, wi, threshold=0, pack_out=True)
     assert isinstance(hp, PackedArray)
 logits = binary_binary_dense(hp, Wp[-1])                 # int32 [8, O]
+# the same hidden stack as ONE megakernel launch (activations VMEM-
+# resident across layers on kernel backends — the TULIP-PE schedule)
+from repro.kernels.fused_mlp import fused_binary_mlp
+hp_mega = fused_binary_mlp(binarize_pack(jnp.asarray(x)), Wp[:-1], [0, 0])
+assert (np.asarray(hp_mega.words) == np.asarray(hp.words)).all()
 h = np.where(x > 0, 1.0, -1.0)
 for wi in Ws[:-1]:
     h = np.where(h @ np.where(wi > 0, 1.0, -1.0).T >= 0, 1.0, -1.0)

@@ -86,6 +86,54 @@ def bnn_dense_serve_folded(xp, wp, fold: FoldedThreshold,
     return apply_folded(s, fold)
 
 
+def fold_to_channel_thresholds(wp: PackedArray, fold: FoldedThreshold
+                               ) -> Tuple[PackedArray, jax.Array]:
+    """Rewrite (wp, FoldedThreshold) into the fused-kernel form: packed
+    weights + a plain per-channel int32 threshold vector, absorbing the
+    gamma<0 sign flip into the weights.
+
+    apply_folded computes ``flip ? s < T : s >= T``.  Negating every
+    weight of a flipped channel negates its integer dot (s' = -s), and
+    for integers ``s < T  <=>  s' >= 1 - T``, so the flipped channel
+    becomes a plain >= test: T' = 1 - T.  Negating a pm1-packed row is
+    a bitwise NOT of its words, masked so pad bits stay 0 (the
+    PackedArray contract; the closed-form pad correction needs them).
+    The result drops straight into binary_binary_dense /
+    fused_binary_mlp as ``threshold=T'`` — the TULIP comparator with BN
+    folded in, now fused into the GEMM epilogue."""
+    wp = wp.move_pack_axis_last()
+    nw, length = wp.n_words, wp.length
+    bit = jnp.arange(32, dtype=jnp.uint32)
+    word0 = 32 * jnp.arange(nw, dtype=jnp.uint32)
+    valid = (word0[:, None] + bit[None, :]) < length          # [nw, 32]
+    mask = jnp.sum(valid.astype(jnp.uint32) << bit[None, :],
+                   axis=-1)                                   # [nw]
+    flipped = (~wp.words) & mask[None, :]
+    words = jnp.where(fold.flip[:, None], flipped, wp.words)
+    tvec = jnp.where(fold.flip, 1 - fold.T, fold.T).astype(jnp.int32)
+    return wp.with_words(words), tvec
+
+
+def bnn_mlp_serve_folded(xp, layers, backend=None) -> PackedArray:
+    """Serve a stack of folded binary layers through the megakernel.
+
+    layers: sequence of (wp PackedArray [N, K], FoldedThreshold) pairs
+    as produced by quantize_for_serving.  Each fold is rewritten to the
+    per-channel threshold-vector form (fold_to_channel_thresholds) and
+    the whole stack runs VMEM-resident in one pallas_call on kernel
+    backends (kernels/fused_mlp.py) — activations stay 1-bit from the
+    first layer's input to the last layer's output, the TULIP-PE
+    schedule end to end."""
+    from repro.kernels.fused_mlp import fused_binary_mlp
+
+    ws, tvecs = [], []
+    for wp, fold in layers:
+        w2, tv = fold_to_channel_thresholds(wp, fold)
+        ws.append(w2)
+        tvecs.append(tv)
+    return fused_binary_mlp(xp, ws, tvecs, backend=backend)
+
+
 def quantize_for_serving(w, mu, sigma, gamma, beta, eps: float = 1e-5):
     """Convert a trained binarized layer to the integer serving form.
 

@@ -3,17 +3,26 @@
   packed.py         PackedArray pytree (THE canonical 1-bit layout) +
                     the backend registry (padding/blocking policy)
   xnor_gemm.py      packed weights -> unpack-in-VMEM -> MXU dot
-  popcount_gemm.py  both operands packed -> VPU SWAR-popcount adder tree
+                    (+ fused threshold->pack epilogue)
+  popcount_gemm.py  both operands packed -> VPU Harley-Seal CSA
+                    popcount (+ fused threshold->pack epilogue)
+  csa.py            carry-save popcount + bit-plane packing helpers
+  fused_mlp.py      multi-layer binary-MLP megakernel (activations
+                    VMEM-resident across layers — the TULIP-PE schedule)
   pack.py           sign + bit-pack activations
+  autotune.py       block-size tuning table (shape/backend keyed)
   ops.py            jit wrappers (pallas | interpret | xla dispatch
                     through the registry)
   ref.py            pure-jnp oracles (the allclose targets)
 """
+from repro.kernels.autotune import best_blocks, get_table
+from repro.kernels.fused_mlp import fused_binary_mlp
 from repro.kernels.ops import (binarize_pack, binary_binary_dense,
                                binary_dense, default_backend)
 from repro.kernels.packed import (BackendSpec, PackedArray, get_backend,
                                   register_backend)
 
-__all__ = ["BackendSpec", "PackedArray", "binarize_pack",
+__all__ = ["BackendSpec", "PackedArray", "best_blocks", "binarize_pack",
            "binary_binary_dense", "binary_dense", "default_backend",
-           "get_backend", "register_backend"]
+           "fused_binary_mlp", "get_backend", "get_table",
+           "register_backend"]

@@ -1,0 +1,177 @@
+"""Block-size autotuner for the binarized GEMM kernels.
+
+The kernels used to hard-code ``bm = bn = 128, bk32 = 16``.  Those are
+the right defaults for MXU/VPU-aligned shapes, but dispatch now routes
+every kernel launch through this module instead: a cached tuning table
+keyed on ``(op, backend, M, N, K32)`` returns the block sizes to use,
+falling back to a divisor-clamped heuristic on a miss (and memoizing
+it, so repeated shapes hit the cache).
+
+Entries can come from three places, in priority order:
+
+1. explicit ``put`` calls (e.g. from ``autotune``, which times a set of
+   candidate configs through a caller-supplied runner — on a real TPU
+   this measures actual kernel wall-time),
+2. a JSON table loaded from ``REPRO_TUNING_TABLE`` (or an explicit
+   ``load``) — the persisted format is
+   ``{"op|backend|M|N|K32": {"bm": int, "bn": int, "bk32": int}, ...}``
+   (see DESIGN.md §6 for the contract),
+3. the heuristic default.
+
+The table is process-global (like jit's compilation cache): tuning is a
+property of the host/backend, not of any one model object.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+from repro.kernels.csa import largest_divisor
+
+ENV_TABLE = "REPRO_TUNING_TABLE"
+
+Key = Tuple[str, str, int, int, int]            # (op, backend, M, N, K32)
+
+
+@dataclass(frozen=True)
+class BlockConfig:
+    bm: int
+    bn: int
+    bk32: int                                   # K blocking in words
+
+    @property
+    def bk_bits(self) -> int:
+        return 32 * self.bk32
+
+    def to_json(self) -> Dict[str, int]:
+        return {"bm": self.bm, "bn": self.bn, "bk32": self.bk32}
+
+    @classmethod
+    def from_json(cls, d) -> "BlockConfig":
+        return cls(int(d["bm"]), int(d["bn"]), int(d["bk32"]))
+
+
+def _heuristic(m: int, n: int, k32: int, n_mult: int = 1) -> BlockConfig:
+    """Divisor-clamped version of the old hard-coded 128/128/16."""
+    return BlockConfig(
+        bm=largest_divisor(m, min(128, m)),
+        bn=largest_divisor(n, min(128, n), multiple_of=n_mult),
+        bk32=largest_divisor(k32, min(16, k32)))
+
+
+class TuningTable:
+    """shape/backend-keyed block-size cache with JSON persistence."""
+
+    def __init__(self):
+        self._entries: Dict[Key, BlockConfig] = {}
+        self._loaded_env = False
+
+    @staticmethod
+    def _key_str(key: Key) -> str:
+        return "|".join(str(p) for p in key)
+
+    @staticmethod
+    def _parse_key(s: str) -> Key:
+        op, backend, m, n, k32 = s.split("|")
+        return (op, backend, int(m), int(n), int(k32))
+
+    def _ensure_env_loaded(self) -> None:
+        if self._loaded_env:
+            return
+        self._loaded_env = True
+        path = os.environ.get(ENV_TABLE)
+        if path and os.path.exists(path):
+            self.load(path)
+
+    def get(self, key: Key) -> Optional[BlockConfig]:
+        self._ensure_env_loaded()
+        return self._entries.get(key)
+
+    def put(self, key: Key, cfg: BlockConfig) -> BlockConfig:
+        self._entries[key] = cfg
+        return cfg
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            raw = json.load(f)
+        for k, v in raw.items():
+            self._entries[self._parse_key(k)] = BlockConfig.from_json(v)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({self._key_str(k): v.to_json()
+                       for k, v in sorted(self._entries.items())}, f,
+                      indent=1)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+_TABLE = TuningTable()
+
+
+def get_table() -> TuningTable:
+    return _TABLE
+
+
+def best_blocks(op: str, m: int, n: int, k32: int,
+                backend: str = "pallas") -> BlockConfig:
+    """Tuned (or heuristic, memoized) block sizes for one GEMM shape.
+
+    op: "popcount_gemm" | "xnor_gemm" | "fused_mlp" — part of the key
+    because the ops have different VMEM/compute balance."""
+    key = (op, backend, m, n, k32)
+    hit = _TABLE.get(key)
+    if hit is not None:
+        return hit
+    n_mult = 32 if n % 32 == 0 else 1      # keep bn packable when N is
+    return _TABLE.put(key, _heuristic(m, n, k32, n_mult=n_mult))
+
+
+def candidate_blocks(m: int, n: int, k32: int) -> Iterable[BlockConfig]:
+    """Sensible sweep for ``autotune``: power-of-two tiles clamped to
+    divisors, deduplicated."""
+    seen = set()
+    for bm in (256, 128, 64, 32, 8):
+        for bn in (256, 128, 64, 32):
+            for bk in (32, 16, 8, 4):
+                try:
+                    cfg = BlockConfig(
+                        bm=largest_divisor(m, min(bm, m)),
+                        bn=largest_divisor(n, min(bn, n),
+                                           multiple_of=32 if n % 32 == 0
+                                           else 1),
+                        bk32=largest_divisor(k32, min(bk, k32)))
+                except ValueError:
+                    continue
+                if cfg not in seen:
+                    seen.add(cfg)
+                    yield cfg
+
+
+def autotune(op: str, m: int, n: int, k32: int, backend: str,
+             runner: Callable[[BlockConfig], None],
+             candidates: Optional[Iterable[BlockConfig]] = None,
+             iters: int = 3) -> BlockConfig:
+    """Time ``runner(cfg)`` (which must block until ready) over the
+    candidate configs, store the winner in the table, and return it.
+    The first call per config is discarded as compile time."""
+    best: Optional[Tuple[float, BlockConfig]] = None
+    for cfg in (candidates if candidates is not None
+                else candidate_blocks(m, n, k32)):
+        runner(cfg)                        # compile / warm-up
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            runner(cfg)
+            ts.append(time.perf_counter() - t0)
+        t = min(ts)
+        if best is None or t < best[0]:
+            best = (t, cfg)
+    if best is None:
+        raise ValueError("no viable block candidates for "
+                         f"{op} {m}x{n}x{k32}")
+    return _TABLE.put((op, backend, m, n, k32), best[1])

@@ -1,0 +1,105 @@
+"""Harley-Seal carry-save popcount accumulation over uint32 bit planes.
+
+The TULIP adder tree (paper §III) sums XNOR bits through a network of
+threshold-logic full adders.  The straight VPU translation popcounts
+every packed word (15 ops/word); Harley-Seal does better by running the
+full-adder network *symbolically* on whole 32-bit planes: a carry-save
+adder (CSA) compresses three planes into a sum plane and a carry plane
+(5 bitwise ops), so a group of 8 planes collapses through 7 CSAs into
+one "eights" carry plane plus residues, and the expensive SWAR popcount
+runs once per group instead of once per word — ~3x less VPU work and no
+[bm, bn, bk32] XNOR cube in VMEM (one [bm, bn] plane at a time).
+
+Both the popcount GEMM (which carries the residues across K grid
+blocks in VMEM scratch) and the fused-MLP megakernel (which folds a
+whole layer's K in registers) build on these helpers; ref.py hosts the
+jnp oracle twin (`popcount_gemm_csa_ref`) benchmarked against the cube
+in benchmarks/kernels_bench.py.  Derivation: DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# THE canonical SWAR popcount (kernels.packed owns it; packed does not
+# import csa, so no cycle)
+from repro.kernels.packed import popcount_u32 as popcount_word
+
+GROUP = 8  # planes folded per popcount; weights 1/2/4 remain as residues
+
+
+def csa(a, b, c):
+    """Carry-save full adder on bit planes: returns (sum, carry) with
+    a + b + c == sum + 2 * carry, bitwise-parallel across all lanes."""
+    u = a ^ b
+    return u ^ c, (a & b) | (u & c)
+
+
+def csa_fold(planes: Sequence[jnp.ndarray], acc, ones, twos, fours
+             ) -> Tuple[jnp.ndarray, ...]:
+    """Fold bit planes into a Harley-Seal state.
+
+    State: ``acc`` (int32 popcount partial sum) plus the uint32 residue
+    planes ``ones``/``twos``/``fours`` holding not-yet-counted bits of
+    weight 1/2/4.  Each full GROUP of 8 planes emits one "eights" carry
+    plane, popcounted with weight 8; a trailing partial group is padded
+    with zero planes (zeros add nothing).  The invariant
+    ``total = acc + pc(ones) + 2*pc(twos) + 4*pc(fours)`` holds after
+    every call, so the state may be threaded across any block split of
+    the K axis (csa_finalize collapses it)."""
+    planes = list(planes)
+    if not planes:
+        return acc, ones, twos, fours
+    zero = jnp.zeros_like(planes[0])
+    while len(planes) % GROUP:
+        planes.append(zero)
+    for g in range(0, len(planes), GROUP):
+        d = planes[g:g + GROUP]
+        ones, t0 = csa(ones, d[0], d[1])
+        ones, t1 = csa(ones, d[2], d[3])
+        twos, f0 = csa(twos, t0, t1)
+        ones, t0 = csa(ones, d[4], d[5])
+        ones, t1 = csa(ones, d[6], d[7])
+        twos, f1 = csa(twos, t0, t1)
+        fours, e = csa(fours, f0, f1)
+        acc = acc + GROUP * popcount_word(e)
+    return acc, ones, twos, fours
+
+
+def csa_finalize(acc, ones, twos, fours):
+    """Collapse the Harley-Seal state to the total popcount (int32)."""
+    return (acc + popcount_word(ones) + 2 * popcount_word(twos)
+            + 4 * popcount_word(fours))
+
+
+def pack_bit_planes(bits, valid_n: int, col0):
+    """Shift-or a [bm, bn] boolean decision plane into uint32 words
+    [bm, bn // 32], zeroing columns >= ``valid_n`` (global column index
+    = ``col0`` + local index) so pad bits are 0 per the PackedArray
+    contract — the words feed the next layer's K axis directly."""
+    bm, bn = bits.shape
+    col = col0 + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    b = jnp.where(col < valid_n, bits, False)
+    b32 = b.astype(jnp.uint32).reshape(bm, bn // 32, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    return jnp.sum(b32 << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def largest_divisor(n: int, cap: int, multiple_of: int = 1) -> int:
+    """Largest d <= cap with n % d == 0 and d % multiple_of == 0.
+
+    Raises ValueError when no such divisor exists (i.e. n itself is not
+    a multiple of ``multiple_of``) — the clear error raw-uint32 legacy
+    callers get instead of an opaque block-divisibility assert."""
+    if n % multiple_of:
+        raise ValueError(
+            f"dimension {n} is not a multiple of {multiple_of}; pad the "
+            f"operand (ops.py dispatch does this automatically) or pass "
+            f"a compatible shape")
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0 and d % multiple_of == 0:
+            return d
+    raise ValueError(f"no divisor of {n} is both <= {cap} and a "
+                     f"multiple of {multiple_of}")

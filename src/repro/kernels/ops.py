@@ -4,8 +4,16 @@ Dispatch goes through the backend registry (kernels.packed): a
 BackendSpec owns the padding/blocking policy, and the wrappers here
 normalize PackedArray operands, flatten leading dims, pad M / N / K to
 the spec, run the kernel (or the jnp oracle for "xla"), and slice the
-logical result back out.  Both GEMMs accept legacy raw-uint32 operands
-for callers that manage their own layout.
+logical result back out.  Block sizes come from the autotuner's cached
+tuning table (kernels.autotune) instead of hard-coded tiles.  Both
+GEMMs accept legacy raw-uint32 operands for callers that manage their
+own layout.
+
+The fully-binary hot path is HBM-minimal: with ``pack_out=True`` the
+threshold+bitpack epilogue is fused into the kernel, which emits uint32
+sign words directly — the wrapper returns a PackedArray straight from
+the kernel and the inter-layer activation never exists in HBM as int32
+(the xla oracle stays bit-identical, see tests/test_fused.py).
 
 Backends (see kernels.packed.register_backend):
   "pallas"     real TPU lowering (pl.pallas_call, compiled)
@@ -16,12 +24,14 @@ Default: pallas on TPU, xla elsewhere.
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.autotune import best_blocks
 from repro.kernels.pack import pack as _pack_kernel
 from repro.kernels.packed import (PackedArray, default_backend, get_backend)
 from repro.kernels.popcount_gemm import popcount_gemm as _pop_kernel
@@ -31,6 +41,7 @@ __all__ = ["binarize_pack", "binary_binary_dense", "binary_dense",
            "default_backend"]
 
 Packable = Union[PackedArray, jax.Array]
+Threshold = Union[int, float, jax.Array]
 
 
 def _pad_dim(x: jax.Array, target: int, axis: int) -> jax.Array:
@@ -51,6 +62,48 @@ def _adopt_rows(a: Packable, k: Optional[int]) -> PackedArray:
     if k is None:
         raise ValueError("raw packed words need an explicit k")
     return PackedArray(jnp.asarray(a), length=k, axis=-1)
+
+
+def classify_threshold(threshold: Optional[Threshold], n: int
+                       ) -> Tuple[Optional[Union[int, float]],
+                                  Optional[jax.Array]]:
+    """THE threshold scalar-vs-vector classification (every consumer —
+    both GEMM dispatches and the megakernel — must agree, or backends
+    drift): python/numpy scalars stay static compile-time constants;
+    anything array-like becomes a per-channel [n] vector (0-d arrays
+    broadcast — they may be traced, so they cannot be static)."""
+    if threshold is None:
+        return None, None
+    if isinstance(threshold, (int, np.integer)):
+        return int(threshold), None
+    if isinstance(threshold, (float, np.floating)):
+        return float(threshold), None
+    arr = jnp.asarray(threshold)
+    if arr.ndim == 0:
+        arr = jnp.broadcast_to(arr, (n,))
+    arr = arr.reshape(-1)
+    if arr.shape[0] != n:
+        raise ValueError(f"per-channel threshold has {arr.shape[0]} "
+                         f"entries for N={n}")
+    return None, arr
+
+
+def _split_threshold(threshold: Optional[Threshold], n: int, np_: int
+                     ) -> Tuple[Optional[Union[int, float]],
+                                Optional[jax.Array]]:
+    """classify_threshold + pad the vector form to the blocked N (pad
+    values are masked by valid_n / sliced off)."""
+    thr, tvec = classify_threshold(threshold, n)
+    return thr, None if tvec is None else _pad_dim(tvec, np_, 0)
+
+
+def _as_packed_result(words: jax.Array, lead, m: int, n: int
+                      ) -> PackedArray:
+    """Slice the kernel's padded uint32 output down to the logical rows
+    and word count; bits >= n are already zeroed in-kernel (valid_n)."""
+    nw = (n + 31) // 32
+    return PackedArray(words[:m, :nw].reshape(*lead, nw), length=n,
+                       axis=-1)
 
 
 def binarize_pack(x: jax.Array,
@@ -75,15 +128,21 @@ def binarize_pack(x: jax.Array,
 
 
 def binary_dense(x: jax.Array, wp: Packable, alpha: jax.Array,
-                 threshold: Optional[float] = None,
-                 backend: Optional[str] = None) -> jax.Array:
+                 threshold: Optional[Threshold] = None,
+                 backend: Optional[str] = None,
+                 pack_out: bool = False):
     """Binary-weight dense: x [..., K] float x packed weights -> [.., N].
 
     wp: PackedArray packed over K in [K, N] orientation (words
     [K/32, N], pack axis -2) or legacy raw uint32 [K/32, N].
-    Output is x.dtype; with `threshold`, {-1,+1} in x.dtype on every
-    backend (fused in-kernel on pallas, post-hoc in the oracle).
+    Output is x.dtype; with `threshold` (scalar or per-channel [N]),
+    {-1,+1} in x.dtype on every backend (fused in-kernel on pallas,
+    post-hoc in the oracle).  With ``pack_out=True`` the binarize+pack
+    epilogue is fused too and the result is a PackedArray (length N) —
+    the float->binary boundary layer of a fully-binary stack.
     """
+    if pack_out and threshold is None:
+        raise ValueError("pack_out requires a threshold (binary output)")
     if not isinstance(wp, PackedArray):
         wp = PackedArray(jnp.asarray(wp), length=x.shape[-1], axis=-2)
     if wp.axis != -2:
@@ -98,37 +157,51 @@ def binary_dense(x: jax.Array, wp: Packable, alpha: jax.Array,
     if not be.uses_kernels:
         # pad x with zeros to the word boundary: 0 * (pad weight) == 0
         x2p = _pad_dim(x2, wp.padded_length, 1)
+        thr_s, tvec = _split_threshold(threshold, N, N)
         y = ref.xnor_gemm_ref(x2p, wp.words, alpha,
-                              threshold).astype(x.dtype)
-        return y.reshape(*lead, N)
+                              thr_s if tvec is None else tvec
+                              ).astype(x.dtype)
+        y = y.reshape(*lead, N)
+        return PackedArray.pack(y, axis=-1) if pack_out else y
     wpad = wp.pad_to(be.pad_k(wp.padded_length))
     Mp, Np = be.pad_m(M), be.pad_n(N)
     x2p = _pad_dim(_pad_dim(x2, wpad.padded_length, 1), Mp, 0)
     words = _pad_dim(wpad.words, Np, 1)
     al = _pad_dim(alpha.reshape(-1), Np, 0)
-    y = _xnor_kernel(x2p, words, al, threshold=threshold,
-                     interpret=be.interpret)[:M, :N]
-    return y.reshape(*lead, N)
+    thr, tvec = _split_threshold(threshold, N, Np)
+    # the fused launch has an extra bn % 32 constraint -> its own key
+    op = "xnor_gemm+pack" if pack_out else "xnor_gemm"
+    blocks = best_blocks(op, Mp, Np, wpad.n_words, be.name)
+    y = _xnor_kernel(x2p, words, al, threshold=thr, threshold_vec=tvec,
+                     pack_out=pack_out, valid_n=N,
+                     bm=blocks.bm, bn=blocks.bn, bk=blocks.bk_bits,
+                     interpret=be.interpret)
+    if pack_out:
+        return _as_packed_result(y, lead, M, N)
+    return y[:M, :N].reshape(*lead, N)
 
 
 def binary_binary_dense(xp: Packable, wp: Packable, k: Optional[int] = None,
-                        threshold: Optional[int] = None,
+                        threshold: Optional[Threshold] = None,
                         backend: Optional[str] = None,
                         pack_out: bool = False):
     """Fully-binary dense: packed acts x packed weights -> int32 dot.
 
     xp: PackedArray [..., K] packed on the last axis (or raw uint32
-        [..., K/32] with explicit k); wp: PackedArray [N, K] packed on
-        the last axis (or raw uint32 [N, K/32]).
+    [..., K/32] with explicit k); wp: PackedArray [N, K] packed on
+    the last axis (or raw uint32 [N, K/32]).
 
-    threshold: integer dot threshold — the output becomes {-1,+1} int32
-    on EVERY backend (fused in-kernel on pallas/interpret, post-hoc on
-    xla; bit-identical, see tests/test_packed.py).
+    threshold: integer dot threshold, scalar or per-channel int32 [N]
+    (the folded-BN form) — the output becomes {-1,+1} int32 on EVERY
+    backend (fused in-kernel on pallas/interpret, post-hoc on xla;
+    bit-identical, see tests/test_packed.py).
 
-    pack_out: with threshold, re-pack the {-1,+1} output into a
-    PackedArray so the next binary layer consumes it directly — a
-    fully-binary MLP chains binarize_pack -> binary_binary_dense ->
-    ... without ever unpacking to bf16.
+    pack_out: with threshold, emit the {-1,+1} output as a PackedArray
+    so the next binary layer consumes it directly.  On kernel backends
+    this is FUSED: the final K block of the popcount GEMM shift-ors the
+    threshold decisions straight into uint32 words, so the int32 [M, N]
+    dot never exists in HBM — a fully-binary MLP chains binarize_pack
+    -> binary_binary_dense -> ... at 1 bit/activation end to end.
     """
     if pack_out and threshold is None:
         raise ValueError("pack_out requires a threshold (binary output)")
@@ -149,14 +222,28 @@ def binary_binary_dense(xp: Packable, wp: Packable, k: Optional[int] = None,
     x2 = xp.words.reshape(-1, xp.n_words)
     M, N = x2.shape[0], wp.words.shape[0]
     if be.uses_kernels:
-        x2p = _pad_dim(x2, be.pad_m(M), 0)
-        w2p = _pad_dim(wp.words, be.pad_n(N), 0)
-        y = _pop_kernel(x2p, w2p, k, threshold=threshold,
-                        interpret=be.interpret)[:M, :N]
+        Mp, Np = be.pad_m(M), be.pad_n(N)
+        x2p = _pad_dim(x2, Mp, 0)
+        w2p = _pad_dim(wp.words, Np, 0)
+        thr, tvec = _split_threshold(threshold, N, Np)
+        # the fused launch has an extra bn % 32 constraint -> own key
+        op = "popcount_gemm+pack" if pack_out else "popcount_gemm"
+        blocks = best_blocks(op, Mp, Np, xp.n_words, be.name)
+        y = _pop_kernel(x2p, w2p, k, threshold=thr, threshold_vec=tvec,
+                        pack_out=pack_out, valid_n=N,
+                        bm=blocks.bm, bn=blocks.bn, bk32=blocks.bk32,
+                        interpret=be.interpret)
+        if pack_out:
+            return _as_packed_result(y, lead, M, N)
+        y = y[:M, :N]
     else:
         y = ref.popcount_gemm_ref(x2, wp.words, k)
         if threshold is not None:
-            y = jnp.where(y >= threshold, 1, -1).astype(jnp.int32)
+            thr_s, tvec = _split_threshold(threshold, N, N)
+            # per-channel thresholds carry int32 semantics on every
+            # backend (the kernel operand is cast the same way)
+            thr = thr_s if tvec is None else tvec.astype(jnp.int32)
+            y = jnp.where(y >= thr, 1, -1).astype(jnp.int32)
     y = y.reshape(*lead, N)
     if pack_out:
         return binarize_pack(y, backend=backend)

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.csa import largest_divisor
+
 
 def _kernel(x_ref, out_ref):
     x = x_ref[...]                                   # [bm, bk]
@@ -29,9 +31,11 @@ def pack(x: jax.Array, bm: int = 128, bk: int = 512,
          interpret: bool = False) -> jax.Array:
     """x: [M, K] (K % 32 == 0) -> uint32 [M, K//32]."""
     M, K = x.shape
-    assert K % 32 == 0
-    bm, bk = min(bm, M), min(bk, K)
-    assert M % bm == 0 and K % bk == 0 and bk % 32 == 0
+    if K % 32:
+        raise ValueError(f"pack kernel needs K % 32 == 0, got K={K}; "
+                         f"use ops.binarize_pack for unaligned lengths")
+    bm = largest_divisor(M, min(bm, M))
+    bk = largest_divisor(K, min(bk, K), multiple_of=32)
     grid = (M // bm, K // bk)
     return pl.pallas_call(
         _kernel,

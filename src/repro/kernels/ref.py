@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.csa import csa_finalize, csa_fold
 from repro.kernels.packed import pack_words, popcount_u32, unpack_words
 
 
@@ -32,6 +33,25 @@ def popcount_gemm_ref(xp: jax.Array, wp: jax.Array, k: int) -> jax.Array:
     pc = popcount_u32(xnor).sum(axis=-1)
     k_packed = 32 * xp.shape[-1]
     return 2 * (pc - (k_packed - k)) - k
+
+
+def popcount_gemm_csa_ref(xp: jax.Array, wp: jax.Array,
+                          k: int) -> jax.Array:
+    """Harley-Seal twin of popcount_gemm_ref: identical output, but the
+    inner loop streams one [M, N] XNOR plane per K-word through the
+    carry-save network (kernels/csa.py) instead of materializing the
+    [M, N, K/32] cube and popcounting every word — the jnp model of the
+    Pallas kernel's restructured loop, benchmarked against the cube in
+    benchmarks/kernels_bench.py."""
+    M, kw = xp.shape
+    N = wp.shape[0]
+    wpt = wp.T                                    # [K/32, N]
+    planes = [~(xp[:, t:t + 1] ^ wpt[t:t + 1, :]) for t in range(kw)]
+    zero = jnp.zeros((M, N), jnp.uint32)
+    acc, ones, twos, fours = csa_fold(
+        planes, jnp.zeros((M, N), jnp.int32), zero, zero, zero)
+    pc = csa_finalize(acc, ones, twos, fours)
+    return 2 * (pc - (32 * kw - k)) - k
 
 
 def pack_ref(x: jax.Array) -> jax.Array:

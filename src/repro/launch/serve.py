@@ -12,6 +12,17 @@ they free up (each slot tracks its own `step`, so sequences of
 different lengths coexist in one decode batch — the per-slot position
 vector is exactly why decode_step takes step: [B]).
 
+Prefill compiles once per prompt-length *bucket*, not once per request:
+prompts are right-padded to the next power of two (clamped to the cache
+capacity) and the jitted prefill for that bucket is cached in
+`Engine._prefill_cache`, with logits taken at the true last token via
+`prefill(lengths=...)`.  Right-padding is safe for attention stacks
+(causal masking + the ring-cache invariant: the slot for position p is
+rewritten by the real token at decode step p before it is ever
+attended to); recurrent stacks (mamba / rglru) carry pad tokens into
+their state, so they fall back to exact-length caching — admitting N
+same-length requests still traces once.
+
 CPU-runnable: PYTHONPATH=src python -m repro.launch.serve \
     --arch qwen1.5-0.5b --reduced --requests 6 --max-new 8
 """
@@ -59,12 +70,44 @@ class Engine:
         self._decode = jax.jit(
             lambda p, b: M.decode_step(p, self.cfg, b))
         self._prefill_cache: Dict[int, Any] = {}
+        self.prefill_traces = 0
+        # right-padding pads never reach attention output (causal mask +
+        # ring-cache overwrite), but they do pollute recurrent state —
+        # those archs cache per exact length instead of per bucket
+        kinds = set(M.decoder_pattern(cfg))
+        self._bucketed = not (kinds & {"mamba", "rglru"}) \
+            and not cfg.is_encdec
+
+    def _prefill_len(self, n: int) -> int:
+        """Bucket a prompt length: next power of two, clamped to the
+        cache capacity (padding past capacity would evict real tokens
+        from the ring); exact length for recurrent stacks."""
+        if not self._bucketed or n >= self.capacity:
+            return n
+        return min(1 << (n - 1).bit_length(), self.capacity)
+
+    def _get_prefill(self, padded_len: int):
+        """The jitted prefill for one bucketed prompt length — traced
+        once, reused for every admit that lands in the bucket."""
+        fn = self._prefill_cache.get(padded_len)
+        if fn is None:
+            def fn(params, tokens, lengths):
+                return M.prefill(params, self.cfg, {"tokens": tokens},
+                                 cache_capacity=self.capacity,
+                                 lengths=lengths)
+            fn = jax.jit(fn)
+            self._prefill_cache[padded_len] = fn
+            self.prefill_traces += 1
+        return fn
 
     def _admit(self, req: Request, slot: int) -> None:
         """Prefill the prompt for one slot and splice its caches in."""
-        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-        logits, caches1 = M.prefill(self.params, self.cfg, batch,
-                                    cache_capacity=self.capacity)
+        n = len(req.prompt)
+        padded = self._prefill_len(n)
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, :n] = req.prompt
+        logits, caches1 = self._get_prefill(padded)(
+            self.params, jnp.asarray(toks), jnp.asarray([n], np.int32))
         tok = int(jnp.argmax(logits[0, -1]))
         req.out.append(tok)
         self.caches = _splice_slot(self.caches, caches1, slot)

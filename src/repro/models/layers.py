@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.binarize import ste_sign, unpack_bits
 from repro.kernels import ops as kops
+from repro.kernels.fused_mlp import fused_binary_mlp
 from repro.kernels.packed import PackedArray
 from repro.runtime.sharding import shard_act
 
@@ -106,16 +107,34 @@ def dense(p: Dict[str, jax.Array], x, mode: str = "none",
     return y
 
 
-def packed_dense(p: Dict[str, jax.Array], xp: PackedArray, threshold: int,
+def packed_dense(p: Dict[str, jax.Array], xp: PackedArray, threshold,
                  backend: Optional[str] = None) -> PackedArray:
     """Hidden layer of a fully-binary stack: PackedArray -> PackedArray.
 
-    XNOR + popcount + integer threshold, output re-packed, so a binary
-    MLP chains  binarize_pack -> packed_dense -> ... -> dense  with the
-    activations staying 1-bit between layers (no bf16 unpack)."""
+    XNOR + popcount + integer threshold (scalar or per-channel [N]),
+    with the threshold->pack epilogue FUSED in-kernel: the uint32 sign
+    words come straight out of the popcount GEMM, so a binary MLP
+    chains  binarize_pack -> packed_dense -> ... -> dense  with the
+    activations staying 1-bit between layers and no int32 [M, N]
+    round-trip through HBM."""
     return kops.binary_binary_dense(xp, p["wp"].move_pack_axis_last(),
                                     threshold=threshold, pack_out=True,
                                     backend=backend)
+
+
+def packed_mlp(ps, xp: PackedArray, thresholds,
+               backend: Optional[str] = None) -> PackedArray:
+    """A whole fully-binary hidden stack in one megakernel launch.
+
+    ps: sequence of packed layer params (each holding a ``wp``
+    PackedArray in the [K, N] axis -2 layout from pack_dense_params);
+    thresholds: one int (or per-channel int32 [N_l]) per layer.  On
+    kernel backends the layers run inside a single pallas_call with the
+    packed activations resident in VMEM scratch (kernels/fused_mlp.py,
+    the TULIP-PE schedule); on "xla" it is the bit-identical chained
+    oracle."""
+    ws = [p["wp"].move_pack_axis_last() for p in ps]
+    return fused_binary_mlp(xp, ws, thresholds, backend=backend)
 
 
 # ------------------------------------------------------------------ #

@@ -105,14 +105,25 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
 
 
 def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
-            cache_capacity: int):
-    """Process the prompt; returns (last-token logits, caches)."""
+            cache_capacity: int, lengths: Optional[jax.Array] = None):
+    """Process the prompt; returns (last-token logits, caches).
+
+    lengths: optional [B] int32 true prompt lengths for right-padded
+    prompts (the serving engine buckets prompts to shared lengths so
+    prefill compiles once per bucket) — logits are taken at position
+    lengths-1 instead of the last padded position."""
     tokens = batch["tokens"]
     ctx = _ctx_from_inputs(params, cfg, batch)
     x, caches, _ = forward(params, cfg, tokens, ctx=ctx,
                            cache_capacity=cache_capacity)
     emb = params.get("lm_head", params["embed"])
-    logits = logits_apply(emb, x[:, -1:], transpose=True)
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+        x_last = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[-1])), axis=1)
+    logits = logits_apply(emb, x_last, transpose=True)
     return logits, caches
 
 

@@ -1,0 +1,406 @@
+"""Fused threshold->pack epilogue + megakernel + autotuner contracts.
+
+The fully-binary hot path (ISSUE 2): with pack_out=True the kernels
+emit uint32 sign words straight from the GEMM epilogue, so the
+inter-layer activation never exists in HBM as int32.  These tests pin
+(1) bit-exactness of the fused path vs the xla oracle over odd K/N,
+(2) the VMEM-residency property itself (no int32 [M, N] intermediate
+in the fused jaxpr), (3) the megakernel vs the chained / dense-sign
+oracles, (4) the folded-BN -> per-channel-threshold rewrite, (5) the
+clamp-to-divisor block logic and its ValueErrors, and (6) the tuning
+table."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import given, settings, st  # hypothesis or self-skip shim
+
+from repro.core.bnn_layers import (bnn_dense_serve_folded,
+                                   bnn_mlp_serve_folded,
+                                   fold_to_channel_thresholds,
+                                   quantize_for_serving)
+from repro.kernels import ref
+from repro.kernels.autotune import (BlockConfig, autotune, best_blocks,
+                                    get_table)
+from repro.kernels.fused_mlp import fused_binary_mlp
+from repro.kernels.ops import binarize_pack, binary_binary_dense, \
+    binary_dense
+from repro.kernels.packed import PackedArray, pack_words
+from repro.kernels.popcount_gemm import popcount_gemm
+from repro.kernels.xnor_gemm import xnor_gemm
+
+
+def _pm1(rng, *shape):
+    return rng.choice([-1.0, 1.0], size=shape).astype(np.float32)
+
+
+# ------------------------------------------------------------------ #
+# fused epilogue: cross-backend bit-exactness                          #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("m,k,n", [(37, 50, 20), (5, 97, 33), (64, 128, 96),
+                                   (3, 33, 65)])
+@pytest.mark.parametrize("thr", ["scalar", "vector"])
+def test_pack_out_bit_exact_odd_shapes(m, k, n, thr):
+    """pallas-interpret fused pack_out vs the xla oracle: identical
+    uint32 words (incl. zeroed pad bits) on deliberately odd K/N."""
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    xs, ws = _pm1(rng, m, k), _pm1(rng, n, k)
+    xp = PackedArray.pack(jnp.asarray(xs))
+    wp = PackedArray.pack(jnp.asarray(ws))
+    t = 2 if thr == "scalar" else jnp.asarray(
+        rng.integers(-5, 5, size=n).astype(np.int32))
+    y_i = binary_binary_dense(xp, wp, threshold=t, pack_out=True,
+                              backend="interpret")
+    y_x = binary_binary_dense(xp, wp, threshold=t, pack_out=True,
+                              backend="xla")
+    assert isinstance(y_i, PackedArray) and isinstance(y_x, PackedArray)
+    assert y_i.length == y_x.length == n
+    assert y_i.words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(y_i.words),
+                                  np.asarray(y_x.words))
+    # and both equal the dense sign oracle
+    tnp = 2 if thr == "scalar" else np.asarray(t)
+    dec = np.where(xs @ ws.T >= tnp, 1.0, -1.0)
+    want = pack_words(jnp.asarray(dec), axis=-1)
+    np.testing.assert_array_equal(np.asarray(y_i.words), np.asarray(want))
+
+
+@given(st.integers(1, 80), st.integers(1, 100), st.integers(1, 70),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_pack_out_matches_oracle(m, k, n, seed):
+    """Property: for ANY shape (odd K/N included) the fused epilogue's
+    words match the oracle's pack of the thresholded dense dot."""
+    rng = np.random.default_rng(seed)
+    xs, ws = _pm1(rng, m, k), _pm1(rng, n, k)
+    xp = PackedArray.pack(jnp.asarray(xs))
+    wp = PackedArray.pack(jnp.asarray(ws))
+    y = binary_binary_dense(xp, wp, threshold=0, pack_out=True,
+                            backend="interpret")
+    dec = np.where(xs @ ws.T >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(
+        np.asarray(y.words),
+        np.asarray(pack_words(jnp.asarray(dec), axis=-1)))
+
+
+def test_binary_dense_pack_out():
+    """The float->binary boundary layer: xnor_gemm's fused epilogue."""
+    rng = np.random.default_rng(11)
+    m, k, n = 37, 96, 40
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = _pm1(rng, k, n)
+    wp = PackedArray.pack(jnp.asarray(w), axis=0)
+    alpha = jnp.asarray(rng.uniform(0.5, 2.0, size=n).astype(np.float32))
+    p_i = binary_dense(x, wp, alpha, threshold=0.0, pack_out=True,
+                       backend="interpret")
+    p_x = binary_dense(x, wp, alpha, threshold=0.0, pack_out=True,
+                       backend="xla")
+    assert p_i.length == p_x.length == n
+    np.testing.assert_array_equal(np.asarray(p_i.words),
+                                  np.asarray(p_x.words))
+
+
+def test_unfused_and_fused_agree():
+    """pack_out=True must equal the two-step threshold-then-
+    binarize_pack chain bit for bit (the path it replaces)."""
+    rng = np.random.default_rng(5)
+    m, k, n = 40, 70, 50
+    xs, ws = _pm1(rng, m, k), _pm1(rng, n, k)
+    xp = PackedArray.pack(jnp.asarray(xs))
+    wp = PackedArray.pack(jnp.asarray(ws))
+    for backend in ("interpret", "xla"):
+        fused = binary_binary_dense(xp, wp, threshold=0, pack_out=True,
+                                    backend=backend)
+        y = binary_binary_dense(xp, wp, threshold=0, backend=backend)
+        unfused = binarize_pack(y.astype(jnp.float32), backend=backend)
+        np.testing.assert_array_equal(np.asarray(fused.words),
+                                      np.asarray(unfused.words))
+
+
+# ------------------------------------------------------------------ #
+# VMEM residency: the int32 [M, N] intermediate must not exist         #
+# ------------------------------------------------------------------ #
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else (val,)
+            for v in vals:
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    yield from _iter_eqns(inner)
+
+
+def _int32_avals(fn, *args):
+    """All int32 eqn-output shapes anywhere in fn's jaxpr (pallas_call
+    kernel jaxprs included)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    shapes = set()
+    for eqn in _iter_eqns(closed.jaxpr):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and getattr(aval, "dtype", None) == \
+                    jnp.int32:
+                shapes.add(tuple(aval.shape))
+    return shapes
+
+
+def test_fused_path_has_no_int32_mn_intermediate():
+    """Regression: the fused pack_out dispatch must not materialize the
+    int32 [M, N] (or padded [Mp, Np]) activation anywhere — neither at
+    the XLA level nor as a full-size kernel output."""
+    rng = np.random.default_rng(7)
+    m, k, n = 200, 64, 200          # pads to 256; kernel blocks are 128
+    xs, ws = _pm1(rng, m, k), _pm1(rng, n, k)
+    xp = PackedArray.pack(jnp.asarray(xs))
+    wp = PackedArray.pack(jnp.asarray(ws))
+
+    fused = _int32_avals(
+        lambda a, b: binary_binary_dense(a, b, threshold=0, pack_out=True,
+                                         backend="interpret").words,
+        xp, wp)
+    banned = {(m, n), (256, 256)}
+    assert not (fused & banned), f"int32 {fused & banned} in fused path"
+
+    # detector sanity: the unfused path DOES contain it
+    unfused = _int32_avals(
+        lambda a, b: binary_binary_dense(a, b, threshold=0,
+                                         backend="interpret"),
+        xp, wp)
+    assert (256, 256) in unfused, unfused
+
+
+# ------------------------------------------------------------------ #
+# megakernel                                                           #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+def test_fused_mlp_matches_dense_oracle(backend):
+    """3-layer stack (odd widths, mixed scalar / per-channel
+    thresholds) vs the dense sign-network oracle, bit for bit."""
+    rng = np.random.default_rng(42)
+    D, H, O, B = 96, 80, 40, 37
+    x = rng.normal(size=(B, D)).astype(np.float32)
+    Ws = [rng.normal(size=(H, D)).astype(np.float32),
+          rng.normal(size=(H, H)).astype(np.float32),
+          rng.normal(size=(O, H)).astype(np.float32)]
+    tv = rng.integers(-4, 4, size=O).astype(np.int32)
+    thresholds = [0, 2, jnp.asarray(tv)]
+    Wp = [PackedArray.pack(jnp.asarray(w), axis=-1) for w in Ws]
+
+    xp = binarize_pack(jnp.asarray(x), backend=backend)
+    out = fused_binary_mlp(xp, Wp, thresholds, backend=backend)
+    assert isinstance(out, PackedArray) and out.length == O
+
+    h = np.where(x > 0, 1.0, -1.0)
+    for w, t in zip(Ws, [0, 2, tv]):
+        s = h @ np.where(w > 0, 1.0, -1.0).T
+        h = np.where(s >= np.asarray(t), 1.0, -1.0)
+    want = pack_words(jnp.asarray(h), axis=-1)
+    np.testing.assert_array_equal(np.asarray(out.words), np.asarray(want))
+
+
+def test_fused_mlp_equals_chained_layers():
+    """One pallas_call for the whole stack == chaining
+    binary_binary_dense(pack_out=True), words identical — and leading
+    batch dims survive."""
+    rng = np.random.default_rng(8)
+    D, H, B = 64, 50, 6
+    x = rng.normal(size=(2, B, D)).astype(np.float32)
+    Ws = [rng.normal(size=(H, D)).astype(np.float32),
+          rng.normal(size=(H, H)).astype(np.float32)]
+    Wp = [PackedArray.pack(jnp.asarray(w), axis=-1) for w in Ws]
+    xp = binarize_pack(jnp.asarray(x), backend="interpret")
+
+    mega = fused_binary_mlp(xp, Wp, [0, 1], backend="interpret")
+    h = xp
+    for wp in Wp:
+        h = binary_binary_dense(h, wp, threshold=0 if wp is Wp[0] else 1,
+                                pack_out=True, backend="interpret")
+    assert mega.words.shape == h.words.shape == (2, B, 2)
+    np.testing.assert_array_equal(np.asarray(mega.words),
+                                  np.asarray(h.words))
+
+
+def test_fused_mlp_threshold_forms_agree_across_backends():
+    """Regression: scalar thresholds in every spelling (python int,
+    numpy scalar, 0-d jax array, float) must classify identically on
+    kernel and oracle backends — 0-d arrays used to be rejected as
+    malformed per-channel vectors on kernel backends only."""
+    rng = np.random.default_rng(21)
+    D, H, B = 64, 32, 5
+    x = rng.normal(size=(B, D)).astype(np.float32)
+    wp = [PackedArray.pack(jnp.asarray(
+        rng.normal(size=(H, D)).astype(np.float32)))]
+    xp_i = binarize_pack(jnp.asarray(x), backend="interpret")
+    xp_x = binarize_pack(jnp.asarray(x), backend="xla")
+    base = None
+    for t in (0, np.int32(0), jnp.int32(0), 0.0):
+        o_i = fused_binary_mlp(xp_i, wp, [t], backend="interpret")
+        o_x = fused_binary_mlp(xp_x, wp, [t], backend="xla")
+        np.testing.assert_array_equal(np.asarray(o_i.words),
+                                      np.asarray(o_x.words))
+        if base is None:
+            base = np.asarray(o_i.words)
+        np.testing.assert_array_equal(np.asarray(o_i.words), base)
+
+
+def test_fused_mlp_validates_chain():
+    rng = np.random.default_rng(0)
+    xp = PackedArray.pack(jnp.asarray(_pm1(rng, 4, 64)))
+    w_bad = PackedArray.pack(jnp.asarray(_pm1(rng, 8, 32)))
+    with pytest.raises(ValueError, match="incoming activation width"):
+        fused_binary_mlp(xp, [w_bad], [0], backend="xla")
+    with pytest.raises(ValueError, match="thresholds"):
+        fused_binary_mlp(xp, [w_bad], [0, 1], backend="xla")
+
+
+# ------------------------------------------------------------------ #
+# folded-BN -> per-channel threshold rewrite                           #
+# ------------------------------------------------------------------ #
+def test_fold_to_channel_thresholds_matches_apply_folded():
+    """Flip absorption: negated weight rows + T' = 1 - T reproduce
+    apply_folded (incl. gamma < 0 channels) exactly, and the rewritten
+    words keep pad bits zero."""
+    rng = np.random.default_rng(3)
+    B, D, H = 9, 70, 50
+    x = rng.normal(size=(B, D)).astype(np.float32)
+    w = rng.normal(size=(H, D)).astype(np.float32)
+    wp, fold = quantize_for_serving(
+        w, rng.normal(size=H), rng.uniform(0.5, 2.0, size=H),
+        rng.normal(size=H), rng.normal(size=H))
+    assert bool(np.asarray(fold.flip).any()), "need gamma<0 channels"
+
+    xp = binarize_pack(jnp.asarray(x), backend="xla")
+    want = bnn_dense_serve_folded(xp, wp, fold)          # +-1 via flip
+    w2, tvec = fold_to_channel_thresholds(wp, fold)
+    got = binary_binary_dense(xp, w2, threshold=tvec, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(want).astype(np.int32),
+                                  np.asarray(got))
+    # pad bits of the flipped rows stay 0 (70 % 32 != 0)
+    pad_mask = ~np.uint32(0) << np.uint32(70 - 64)
+    assert not np.any(np.asarray(w2.words)[:, -1] & pad_mask)
+
+
+def test_bnn_mlp_serve_folded_stack():
+    rng = np.random.default_rng(13)
+    B, D, H = 7, 64, 48
+    x = rng.normal(size=(B, D)).astype(np.float32)
+
+    def mk(kin, kout):
+        return quantize_for_serving(
+            rng.normal(size=(kout, kin)).astype(np.float32),
+            rng.normal(size=kout), rng.uniform(0.5, 2.0, size=kout),
+            rng.normal(size=kout), rng.normal(size=kout))
+
+    layers = [mk(D, H), mk(H, H)]
+    xp = binarize_pack(jnp.asarray(x), backend="xla")
+    out = bnn_mlp_serve_folded(xp, layers, backend="interpret")
+
+    h = xp
+    for wpl, fo in layers:
+        y = bnn_dense_serve_folded(h, wpl, fo)
+        h = PackedArray.pack(jnp.asarray(y), axis=-1)
+    np.testing.assert_array_equal(np.asarray(out.words),
+                                  np.asarray(h.words))
+
+
+# ------------------------------------------------------------------ #
+# block clamping / ValueErrors (satellite)                             #
+# ------------------------------------------------------------------ #
+def test_kernels_clamp_blocks_instead_of_asserting():
+    """Direct kernel callers with non-128-multiple shapes get the
+    largest-divisor clamp, not an AssertionError."""
+    rng = np.random.default_rng(9)
+    m, k, n = 96, 160, 72            # none are 128-multiples
+    xs, ws = _pm1(rng, m, k), _pm1(rng, n, k)
+    xp = pack_words(jnp.asarray(xs), axis=-1)
+    wp = pack_words(jnp.asarray(ws), axis=-1)
+    got = popcount_gemm(xp, wp, k=k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  (xs @ ws.T).astype(np.int32))
+
+
+def test_pack_out_clamps_small_tuned_bn_up():
+    """A tuned/requested bn below the packing minimum (32) must clamp
+    UP for pack_out launches, not explode in the divisor search."""
+    rng = np.random.default_rng(12)
+    m, k, n = 64, 64, 128
+    xs, ws = _pm1(rng, m, k), _pm1(rng, n, k)
+    xp = pack_words(jnp.asarray(xs), axis=-1)
+    wp = pack_words(jnp.asarray(ws), axis=-1)
+    got = popcount_gemm(xp, wp, k=k, threshold=0, pack_out=True,
+                        bn=16, interpret=True)
+    dec = np.where(xs @ ws.T >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(pack_words(jnp.asarray(dec), axis=-1)))
+
+
+def test_kernels_raise_clear_valueerrors():
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.normal(size=(8, 40)).astype(np.float32))
+    wp = pack_words(jnp.asarray(_pm1(rng, 40, 16)), axis=0)  # 2 words
+    alpha = jnp.ones((16,), jnp.float32)
+    with pytest.raises(ValueError, match="contraction dim"):
+        xnor_gemm(x, wp, alpha, interpret=True)   # K=40 vs 2*32=64
+    xs = pack_words(jnp.asarray(_pm1(rng, 8, 64)), axis=-1)
+    ws = pack_words(jnp.asarray(_pm1(rng, 16, 64)), axis=-1)
+    with pytest.raises(ValueError, match="pack_out requires a threshold"):
+        popcount_gemm(xs, ws, k=64, pack_out=True, interpret=True)
+    with pytest.raises(ValueError, match="N % 32"):
+        popcount_gemm(xs, ws[:7], k=64, threshold=0, pack_out=True,
+                      interpret=True)
+
+
+# ------------------------------------------------------------------ #
+# CSA oracle + autotuner                                               #
+# ------------------------------------------------------------------ #
+@given(st.integers(1, 40), st.integers(1, 120), st.integers(1, 30),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_csa_ref_equals_cube_ref(m, k, n, seed):
+    """Harley-Seal restructuring is exact for any shape/bit pattern."""
+    rng = np.random.default_rng(seed)
+    xp = pack_words(jnp.asarray(_pm1(rng, m, k)), axis=-1)
+    wp = pack_words(jnp.asarray(_pm1(rng, n, k)), axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(ref.popcount_gemm_csa_ref(xp, wp, k)),
+        np.asarray(ref.popcount_gemm_ref(xp, wp, k)))
+
+
+def test_tuning_table_roundtrip(tmp_path):
+    tbl = get_table()
+    cfg = best_blocks("popcount_gemm", 256, 256, 16, "interpret")
+    assert (cfg.bm, cfg.bn, cfg.bk32) == (128, 128, 16)
+    # heuristic result is memoized
+    assert best_blocks("popcount_gemm", 256, 256, 16, "interpret") is cfg
+    # divisor clamping on awkward shapes
+    odd = best_blocks("popcount_gemm", 96, 72, 5, "interpret")
+    assert 96 % odd.bm == 0 and 72 % odd.bn == 0 and 5 % odd.bk32 == 0
+    path = tmp_path / "table.json"
+    tbl.save(str(path))
+    data = json.loads(path.read_text())
+    assert data["popcount_gemm|interpret|256|256|16"] == \
+        {"bm": 128, "bn": 128, "bk32": 16}
+    tbl2 = type(tbl)()
+    tbl2.load(str(path))
+    assert tbl2.get(("popcount_gemm", "interpret", 256, 256, 16)) == cfg
+
+
+def test_autotune_picks_fastest_candidate():
+    import time
+
+    calls = []
+
+    def runner(cfg: BlockConfig):
+        calls.append(cfg)
+        if cfg.bm == 64:             # pretend 64 is the fast tile
+            return
+        time.sleep(0.002)
+
+    cands = [BlockConfig(128, 128, 16), BlockConfig(64, 128, 16)]
+    best = autotune("popcount_gemm", 128, 128, 16, "testbe", runner,
+                    candidates=cands, iters=2)
+    assert best.bm == 64
+    assert best_blocks("popcount_gemm", 128, 128, 16, "testbe") is best

@@ -65,6 +65,48 @@ def test_serving_packed_equals_dense_outputs():
     assert dense_out == packed_out
 
 
+def test_prefill_buckets_reuse_one_trace():
+    """Admitting N requests with varied prompt lengths in one pow2
+    bucket must build ONE jitted prefill (the _prefill_cache satellite)
+    and generate exactly the tokens the exact-length engine does."""
+    cfg = reduced(ARCHS["qwen1.5-0.5b"]).replace(dtype="float32",
+                                                 num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lens = [5, 6, 7, 8, 5]
+
+    def run(bucketed):
+        rng = np.random.default_rng(0)
+        eng = Engine(cfg, params, batch_slots=2, capacity=24)
+        eng._bucketed = bucketed
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size, n).astype(
+            np.int32), 3) for i, n in enumerate(lens)]
+        eng.run(reqs, log=lambda *_: None)
+        return eng, [r.out for r in reqs]
+
+    eng_b, out_b = run(True)
+    assert eng_b.prefill_traces == 1, eng_b.prefill_traces
+    assert sorted(eng_b._prefill_cache) == [8]
+    eng_e, out_e = run(False)
+    assert eng_e.prefill_traces == len(set(lens))
+    assert out_b == out_e, "length bucketing changed generated tokens"
+
+
+def test_recurrent_archs_opt_out_of_prompt_bucketing():
+    """Right-padding pollutes recurrent (mamba/rglru) state, so those
+    engines must disable length bucketing — regression for the guard
+    matching the param key 'ssm' instead of the block kind 'mamba'."""
+    cfg = reduced(ARCHS["falcon-mamba-7b"]).replace(dtype="float32",
+                                                    num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, batch_slots=1, capacity=24)
+    assert eng._bucketed is False
+    cfg_a = reduced(ARCHS["qwen1.5-0.5b"]).replace(dtype="float32",
+                                                   num_layers=2)
+    eng_a = Engine(cfg_a, init_params(jax.random.PRNGKey(0), cfg_a),
+                   batch_slots=1, capacity=24)
+    assert eng_a._bucketed is True
+
+
 def test_param_counts_match_assignment_scale():
     expect = {
         "command-r-plus-104b": (95e9, 115e9),
