@@ -31,6 +31,7 @@ PEAK = 197e12
 _HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_OUT = os.path.join(_HERE, "BENCH_kernels.json")
 FUSED_OUT = os.path.join(_HERE, "BENCH_fused.json")
+CONV_OUT = os.path.join(_HERE, "BENCH_conv.json")
 
 
 def model_bytes(m, k, n):
@@ -209,21 +210,150 @@ def run_fused(log=print, out_json=FUSED_OUT, smoke=False):
     return out
 
 
+def run_conv(log=print, out_json=CONV_OUT, smoke=False):
+    """Packed binary conv2d: byte model + bit-identity + schedule race.
+
+    Three claims, per BinaryNet-shaped layer (ISSUE 3 acceptance):
+      * bytes: channel-packed NHWC activations + packed filters move
+        ~16x fewer HBM bytes than the bf16 NHWC equivalent, and the
+        direct (im2col-free) schedule skips the patch-matrix write +
+        re-read that the im2col fallback pays (fused_vs_im2col ratio);
+      * direct kernel, word-level im2col fallback, and the jnp
+        sign-conv oracle are BIT-IDENTICAL on every backend available
+        on this host, fused pack_out epilogue included (raises on
+        divergence — the CI bench-smoke gate runs exactly this);
+      * wall time: the im2col-free schedule vs the patch-materializing
+        schedule, jnp twins jitted on this host (on TPU the same
+        harness times the Pallas kernels themselves).
+    Also emits the whole-workload byte model from packed_cnn_traffic.
+    """
+    from repro.core.workloads import alexnet_imagenet, binarynet_cifar10
+    from repro.kernels.ops import binary_conv2d
+    from repro.kernels.packed_conv import im2col_words, pad_words_spatial
+    from repro.models.layers import packed_cnn_traffic
+
+    # (name, nb, h, w, c, f, k): BinaryNet CIFAR-10 body layers
+    shapes = [("smoke", 2, 6, 6, 64, 64, 3)] if smoke else \
+        [("binarynet_conv3", 2, 16, 16, 128, 256, 3),
+         ("binarynet_conv5", 2, 8, 8, 256, 512, 3)]
+    backends = ["xla", "interpret"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+    log(f"\n== Packed binary conv2d (backends checked: {backends}) ==")
+    rows = []
+    for name, nb, h, w, c, f, k in shapes:
+        rng = np.random.default_rng(h * c + f)
+        x = rng.choice([-1.0, 1.0], size=(nb, h, w, c)).astype(np.float32)
+        wts = rng.choice([-1.0, 1.0], size=(k, k, c, f)).astype(np.float32)
+        xp = PackedArray.pack(jnp.asarray(x), axis=-1)
+        wf = PackedArray.pack(jnp.asarray(wts), axis=2)
+
+        # -- bit-identity: direct / im2col / oracle, fused epilogue --- #
+        words = {}
+        for be in backends:
+            impls = ["direct", "im2col"] if be != "xla" else ["direct"]
+            for impl in impls:
+                got = binary_conv2d(xp, wf, threshold=0, pack_out=True,
+                                    backend=be, impl=impl)
+                words[(be, impl)] = np.asarray(got.words)
+        base = words[("xla", "direct")]
+        for key, got in words.items():
+            np.testing.assert_array_equal(
+                got, base, err_msg=f"{key} diverges from the xla oracle")
+
+        # -- byte model ----------------------------------------------- #
+        c32 = (c + 31) // 32
+        m = nb * h * w                       # stride 1, same pad
+        k32 = k * k * c32
+        act_p, act_b = nb * h * w * c // 8, 2 * nb * h * w * c
+        w_p, w_b = k * k * c * f // 8, 2 * k * k * c * f
+        out_p, out_b = m * f // 8, 2 * m * f
+        packed_bytes = act_p + w_p + out_p
+        bf16_bytes = act_b + w_b + out_b
+        im2col_extra = 2 * 4 * m * k32       # patch write + re-read
+        fused_vs_im2col = (packed_bytes + im2col_extra) / packed_bytes
+
+        # -- schedule race ------------------------------------------- #
+        # on TPU this times the direct Pallas kernel itself; elsewhere
+        # the xla oracle is the only meaningfully-timeable direct form
+        # (interpret mode measures the python interpreter, not the
+        # schedule)
+        kb = "pallas" if jax.default_backend() == "tpu" else "xla"
+        direct = jax.jit(lambda a, b: binary_conv2d(
+            a, b, threshold=0, pack_out=True, backend=kb,
+            impl="direct").words)
+        xw = pad_words_spatial(xp.words, (k - 1) // 2, (k - 1) // 2)
+
+        def im2col_path(xw_, ww_):
+            patches = im2col_words(xw_, k, k, 1, h, w)
+            pc = ref.popcount_gemm_ref(patches, ww_, k * k * c)
+            dec = jnp.where(pc >= 0, 1.0, -1.0)
+            return PackedArray.pack(dec, axis=-1).words
+
+        ww = wf.words.reshape(k32, f).T
+        im2col = jax.jit(im2col_path)
+        np.testing.assert_array_equal(
+            np.asarray(im2col(xw, ww)).reshape(base.shape), base)
+        t_direct = _wall(direct, xp, wf)
+        t_im2col = _wall(im2col, xw, ww)
+
+        rows.append({
+            "name": name, "nb": nb, "h": h, "w": w, "c": c, "f": f, "k": k,
+            "packed_bytes": packed_bytes, "bf16_bytes": bf16_bytes,
+            "packed_vs_bf16_bytes_ratio": bf16_bytes / packed_bytes,
+            "im2col_extra_bytes": im2col_extra,
+            "fused_vs_im2col_bytes_ratio": fused_vs_im2col,
+            "t_direct_s": t_direct, "t_im2col_s": t_im2col,
+            "timed_backend": kb,
+            "direct_speedup": t_im2col / t_direct,
+            "bit_identical": sorted(f"{b}:{i}" for b, i in words),
+        })
+        log(f"{name:>16s} | bytes bf16 {bf16_bytes / 1e6:7.2f}MB -> packed "
+            f"{packed_bytes / 1e6:6.2f}MB ({bf16_bytes / packed_bytes:.1f}x)"
+            f" | im2col pays {fused_vs_im2col:.2f}x bytes | direct "
+            f"{t_direct * 1e3:7.2f}ms im2col {t_im2col * 1e3:7.2f}ms "
+            f"({t_im2col / t_direct:.2f}x) | bit-identical OK")
+
+    workloads = {
+        wl.name: packed_cnn_traffic(wl, batch=1)
+        for wl in (binarynet_cifar10(), alexnet_imagenet())}
+    for nm, tr in workloads.items():
+        log(f"{nm}: whole-net forward {tr['bf16_bytes'] / 1e6:.1f}MB bf16 "
+            f"-> {tr['packed_bytes'] / 1e6:.1f}MB packed "
+            f"({tr['ratio_bf16_over_packed']:.1f}x)")
+
+    out = {"host_backend": jax.default_backend(),
+           "backends_checked": backends, "smoke": smoke,
+           "conv": rows, "workload_traffic": workloads}
+    if out_json:
+        with open(out_json, "w") as f_:
+            json.dump(out, f_, indent=1)
+        log(f"wrote {out_json}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
                     help="output json path ('' to skip writing; default "
-                         "BENCH_kernels.json / BENCH_fused.json)")
+                         "BENCH_kernels.json / BENCH_fused.json / "
+                         "BENCH_conv.json)")
     ap.add_argument("--fused", action="store_true",
                     help="benchmark the fused threshold->pack epilogue "
                          "(fails on any fused/unfused or cross-backend "
                          "divergence)")
+    ap.add_argument("--conv", action="store_true",
+                    help="benchmark the packed binary conv2d datapath "
+                         "(fails on any direct/im2col/oracle divergence)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small shapes for CI (with --fused)")
+                    help="small shapes for CI (with --fused/--conv)")
     args = ap.parse_args()
     if args.fused:
         dest = FUSED_OUT if args.out is None else (args.out or None)
         run_fused(out_json=dest, smoke=args.smoke)
+    elif args.conv:
+        dest = CONV_OUT if args.out is None else (args.out or None)
+        run_conv(out_json=dest, smoke=args.smoke)
     else:
         dest = DEFAULT_OUT if args.out is None else (args.out or None)
         run(out_json=dest)

@@ -7,6 +7,11 @@
 3. A fully-binary 3-layer MLP whose activations STAY packed between
    layers (binarize_pack -> binary_binary_dense -> ... , no bf16
    round-trip — the paper's keep-everything-1-bit datapath).
+4. The paper's headline workload: one packed binary conv layer, then
+   the whole BinaryNet CIFAR-10 forward pass built straight from the
+   Workload dataclass, with the HBM bytes moved vs the bf16
+   equivalent.
+5. A whole (reduced) assigned LM architecture with binarized weights.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -75,7 +80,45 @@ assert (np.asarray(logits) == ref_logits).all()
 print(f"[framework] 3-layer fully-binary MLP, activations packed "
       f"between layers ({D}->{H}->{H}->{O}), == float sign-net ✓")
 
-# --- 4. a whole (reduced) assigned architecture, binarized ----------
+# --- 4. packed binary conv + the BinaryNet CIFAR-10 workload --------
+from repro.core.bnn_layers import maxpool_packed
+from repro.core.workloads import binarynet_cifar10
+from repro.kernels.ops import binary_conv2d
+from repro.models.layers import (packed_cnn_apply, packed_cnn_init,
+                                 packed_cnn_traffic)
+
+# one conv3-sized BinaryNet layer: channel-packed NHWC in, fused
+# threshold->pack epilogue out — the int32 NHWC activation never
+# exists in HBM (DESIGN.md §7)
+nb, hh, ww_, cc, ff = 2, 16, 16, 128, 256
+xs = jnp.asarray(rng.choice([-1.0, 1.0], size=(nb, hh, ww_, cc))
+                 .astype(np.float32))
+wc = jnp.asarray(rng.choice([-1.0, 1.0], size=(3, 3, cc, ff))
+                 .astype(np.float32))
+ap = binarize_pack(xs)                                   # [2,16,16,C/32]
+out = binary_conv2d(ap, PackedArray.pack(wc, axis=2), threshold=0,
+                    pack_out=True)
+pooled = maxpool_packed(out)                             # OR == max on ±1
+bf16_bytes = 2 * (xs.size + wc.size + out.shape[0] * 16 * 16 * ff)
+print(f"[conv] binary conv {cc}->{ff} + OR-pool: {ap.nbytes + out.nbytes}"
+      f" activation bytes in HBM vs {bf16_bytes} bf16 "
+      f"({bf16_bytes // (ap.nbytes + out.nbytes)}x less), out "
+      f"{pooled.shape} still packed ✓")
+
+# the whole BinaryNet CIFAR-10 net, instantiated from the Workload rows
+wl = binarynet_cifar10()
+cnn = packed_cnn_init(jax.random.PRNGKey(3), wl)
+img = jax.random.normal(jax.random.PRNGKey(4), (1, 32, 32, 3),
+                        jnp.float32)
+logits = packed_cnn_apply(cnn, img, wl)
+tr = packed_cnn_traffic(wl, batch=1)
+print(f"[conv] BinaryNet CIFAR-10 forward (6 conv + 3 fc, "
+      f"{wl.total_ops / 1e6:.0f} MOp): logits {logits.shape}, HBM "
+      f"{tr['packed_bytes'] / 1e6:.1f}MB packed vs "
+      f"{tr['bf16_bytes'] / 1e6:.1f}MB bf16 "
+      f"({tr['ratio_bf16_over_packed']:.1f}x) ✓")
+
+# --- 5. a whole (reduced) assigned architecture, binarized ----------
 cfg = reduced(get_arch("mixtral-8x22b")).replace(dtype="float32")
 params = init_params(jax.random.PRNGKey(0), cfg)
 batch = {

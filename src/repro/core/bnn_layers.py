@@ -13,7 +13,7 @@ and tests verify bit-for-bit.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +86,28 @@ def bnn_dense_serve_folded(xp, wp, fold: FoldedThreshold,
     return apply_folded(s, fold)
 
 
+def _negate_packed_rows(words: jax.Array, length: int, word_axis: int,
+                        flip: jax.Array, chan_axis: int) -> jax.Array:
+    """Bitwise-NOT the words of flipped output channels, masked so pad
+    bits stay 0 (the PackedArray contract: the closed-form pad
+    correction needs them).  ``word_axis`` is the packed-word axis,
+    ``chan_axis`` the output-channel axis ``flip`` indexes."""
+    ndim = words.ndim
+    word_axis %= ndim
+    chan_axis %= ndim
+    nw = words.shape[word_axis]
+    bit = jnp.arange(32, dtype=jnp.uint32)
+    word0 = 32 * jnp.arange(nw, dtype=jnp.uint32)
+    valid = (word0[:, None] + bit[None, :]) < length          # [nw, 32]
+    mask = jnp.sum(valid.astype(jnp.uint32) << bit[None, :], axis=-1)
+    shape = [1] * ndim
+    shape[word_axis] = nw
+    flipped = (~words) & mask.reshape(shape)
+    fshape = [1] * ndim
+    fshape[chan_axis] = flip.shape[0]
+    return jnp.where(flip.reshape(fshape), flipped, words)
+
+
 def fold_to_channel_thresholds(wp: PackedArray, fold: FoldedThreshold
                                ) -> Tuple[PackedArray, jax.Array]:
     """Rewrite (wp, FoldedThreshold) into the fused-kernel form: packed
@@ -102,16 +124,26 @@ def fold_to_channel_thresholds(wp: PackedArray, fold: FoldedThreshold
     fused_binary_mlp as ``threshold=T'`` — the TULIP comparator with BN
     folded in, now fused into the GEMM epilogue."""
     wp = wp.move_pack_axis_last()
-    nw, length = wp.n_words, wp.length
-    bit = jnp.arange(32, dtype=jnp.uint32)
-    word0 = 32 * jnp.arange(nw, dtype=jnp.uint32)
-    valid = (word0[:, None] + bit[None, :]) < length          # [nw, 32]
-    mask = jnp.sum(valid.astype(jnp.uint32) << bit[None, :],
-                   axis=-1)                                   # [nw]
-    flipped = (~wp.words) & mask[None, :]
-    words = jnp.where(fold.flip[:, None], flipped, wp.words)
+    words = _negate_packed_rows(wp.words, wp.length, word_axis=-1,
+                                flip=fold.flip, chan_axis=0)
     tvec = jnp.where(fold.flip, 1 - fold.T, fold.T).astype(jnp.int32)
     return wp.with_words(words), tvec
+
+
+def fold_conv_to_channel_thresholds(wf: PackedArray, fold: FoldedThreshold
+                                    ) -> Tuple[PackedArray, jax.Array]:
+    """Conv twin of fold_to_channel_thresholds: wf is a PackedArray
+    filter [KH, KW, C, F] packed over C (axis -2), fold indexes the F
+    output channels.  Negating every tap word of a flipped channel
+    negates its conv dot, so the flipped channel becomes a plain
+    ``>= 1 - T`` test — the form ops.binary_conv2d fuses in-kernel."""
+    if wf.ndim != 4 or wf.axis != -2:
+        raise ValueError(f"expected [KH, KW, C, F] packed on axis -2, "
+                         f"got ndim={wf.ndim} axis={wf.axis}")
+    words = _negate_packed_rows(wf.words, wf.length, word_axis=-2,
+                                flip=fold.flip, chan_axis=-1)
+    tvec = jnp.where(fold.flip, 1 - fold.T, fold.T).astype(jnp.int32)
+    return wf.with_words(words), tvec
 
 
 def bnn_mlp_serve_folded(xp, layers, backend=None) -> PackedArray:
@@ -151,3 +183,78 @@ def quantize_for_serving(w, mu, sigma, gamma, beta, eps: float = 1e-5):
     fold = fold_bn_threshold(jnp.asarray(mu) / a, sd / a,
                              gamma, beta, n, eps=0.0)
     return wp, fold
+
+
+# ------------------------------------------------------------------ #
+# convolutional layers (the paper's Table III-V workload bodies)       #
+# ------------------------------------------------------------------ #
+def binary_conv(xp: PackedArray, wf: PackedArray,
+                fold: Union[FoldedThreshold, int, jax.Array, None] = None,
+                stride: int = 1, padding="same", pack_out: bool = False,
+                backend: Optional[str] = None, impl: str = "auto"):
+    """Serve one binary conv layer: packed NHWC acts x packed filters.
+
+    fold: a FoldedThreshold (BN folded per §IV-D — rewritten to the
+    fused per-channel form, gamma<0 flips absorbed into the filter
+    words), a plain integer/per-channel threshold, or None (raw int32
+    dot).  With ``pack_out=True`` the output stays channel-packed for
+    the next binary conv/pool — the conv body of BinaryNet/AlexNet
+    never materializes an int32 NHWC activation (DESIGN.md SS7)."""
+    from repro.kernels.ops import binary_conv2d
+
+    thr = fold
+    if isinstance(fold, FoldedThreshold):
+        wf, thr = fold_conv_to_channel_thresholds(wf, fold)
+    return binary_conv2d(xp, wf, stride=stride, padding=padding,
+                         threshold=thr, pack_out=pack_out,
+                         backend=backend, impl=impl)
+
+
+def binary_weight_conv(x: jax.Array, w: jax.Array, stride: int = 1,
+                       padding="same",
+                       alpha: Optional[jax.Array] = None) -> jax.Array:
+    """First-layer ("integer" in workloads.py / paper Table III) conv:
+    real-valued input x [N, H, W, C] against binarized weights
+    alpha * sign(w) — the XNOR-Net boundary layer.  Spatial padding is
+    real zero-padding (the input is not bit-packed, so zeros exist).
+    Returns float [N, HO, WO, F]; follow with core.binarize /
+    ops.binarize_pack to enter the packed domain."""
+    from repro.kernels.ops import conv_padding
+
+    kh, kw = w.shape[0], w.shape[1]
+    pad_h, pad_w = conv_padding(padding, kh, kw)
+    wb = jnp.where(w > 0, 1.0, -1.0).astype(jnp.float32)
+    if alpha is None:
+        alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=(0, 1, 2))
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), wb, window_strides=(stride, stride),
+        padding=((pad_h, pad_h), (pad_w, pad_w)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y * alpha
+
+
+def maxpool_packed(xp: PackedArray, window: int = 2,
+                   stride: Optional[int] = None) -> PackedArray:
+    """Max-pool on channel-packed +-1 NHWC activations — in the sign
+    domain max == logical OR, so the pool is a bitwise OR of the window
+    words: 32 channels per op, no unpacking, pad bits stay 0 (OR of
+    zeros).  The exact trick the paper's conv schedule exploits: the
+    comparator output is already 1-bit when the pool consumes it."""
+    if xp.ndim != 4 or xp.axis != -1:
+        raise ValueError(f"expected [N, H, W, C] packed on the channel "
+                         f"axis, got ndim={xp.ndim} axis={xp.axis}")
+    s = window if stride is None else stride
+    words = xp.words
+    h, w = words.shape[1], words.shape[2]
+    ho = (h - window) // s + 1
+    wo = (w - window) // s + 1
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"pool window {window} stride {s} empties the "
+                         f"{h}x{w} input")
+    out = None
+    for i in range(window):
+        for j in range(window):
+            win = words[:, i:i + (ho - 1) * s + 1:s,
+                        j:j + (wo - 1) * s + 1:s, :]
+            out = win if out is None else out | win
+    return xp.with_words(out)

@@ -1,4 +1,5 @@
-"""Pallas TPU kernels for the paper's compute hot-spot: binarized GEMM.
+"""Pallas TPU kernels for the paper's compute hot-spots: binarized
+GEMM and binary convolution.
 
   packed.py         PackedArray pytree (THE canonical 1-bit layout) +
                     the backend registry (padding/blocking policy)
@@ -6,6 +7,8 @@
                     (+ fused threshold->pack epilogue)
   popcount_gemm.py  both operands packed -> VPU Harley-Seal CSA
                     popcount (+ fused threshold->pack epilogue)
+  packed_conv.py    im2col-free binary conv2d on channel-packed NHWC
+                    words (+ word-level im2col fallback)
   csa.py            carry-save popcount + bit-plane packing helpers
   fused_mlp.py      multi-layer binary-MLP megakernel (activations
                     VMEM-resident across layers — the TULIP-PE schedule)
@@ -15,14 +18,16 @@
                     through the registry)
   ref.py            pure-jnp oracles (the allclose targets)
 """
-from repro.kernels.autotune import best_blocks, get_table
+from repro.kernels.autotune import best_blocks, best_conv_blocks, get_table
 from repro.kernels.fused_mlp import fused_binary_mlp
 from repro.kernels.ops import (binarize_pack, binary_binary_dense,
-                               binary_dense, default_backend)
+                               binary_conv2d, binary_dense,
+                               default_backend)
 from repro.kernels.packed import (BackendSpec, PackedArray, get_backend,
                                   register_backend)
 
-__all__ = ["BackendSpec", "PackedArray", "best_blocks", "binarize_pack",
-           "binary_binary_dense", "binary_dense", "default_backend",
+__all__ = ["BackendSpec", "PackedArray", "best_blocks",
+           "best_conv_blocks", "binarize_pack", "binary_binary_dense",
+           "binary_conv2d", "binary_dense", "default_backend",
            "fused_binary_mlp", "get_backend", "get_table",
            "register_backend"]

@@ -20,6 +20,25 @@ Entries can come from three places, in priority order:
 
 The table is process-global (like jit's compilation cache): tuning is a
 property of the host/backend, not of any one model object.
+
+Inputs/outputs: ``best_blocks`` takes the PADDED problem shape (after
+ops.py dispatch applies the BackendSpec padding) and returns a
+``BlockConfig(bm, bn, bk32)`` whose members always divide the padded
+dims — the kernels re-clamp defensively, but a table hit never forces
+a clamp.  Conv launches key through ``best_conv_blocks`` under the
+im2col-equivalent GEMM shape (M = HO*WO, N = F_padded, K32 =
+KH*KW*C32; DESIGN.md SS7).
+
+Invariants / failure modes:
+* fused ``pack_out`` launches use a distinct "<op>+pack" op key — their
+  bn carries an extra %32 packing constraint, so an unfused tuned entry
+  (bn possibly < 32) must never be served to a fused launch;
+* a malformed JSON table raises at ``load`` time (fail fast), while a
+  missing ``$REPRO_TUNING_TABLE`` path is silently ignored (tuning is
+  an optimization, not a dependency);
+* ``autotune`` raises ValueError when no candidate is viable, and its
+  first per-config call is discarded as compile time — runners must
+  block until ready or every config times as a dispatch.
 """
 from __future__ import annotations
 
@@ -121,14 +140,30 @@ def best_blocks(op: str, m: int, n: int, k32: int,
                 backend: str = "pallas") -> BlockConfig:
     """Tuned (or heuristic, memoized) block sizes for one GEMM shape.
 
-    op: "popcount_gemm" | "xnor_gemm" | "fused_mlp" — part of the key
-    because the ops have different VMEM/compute balance."""
+    op: "popcount_gemm" | "xnor_gemm" | "fused_mlp" | "packed_conv" —
+    part of the key because the ops have different VMEM/compute
+    balance; fused pack_out launches append "+pack" (their bn has an
+    extra %32 constraint, so tuned entries must not leak across)."""
     key = (op, backend, m, n, k32)
     hit = _TABLE.get(key)
     if hit is not None:
         return hit
     n_mult = 32 if n % 32 == 0 else 1      # keep bn packable when N is
     return _TABLE.put(key, _heuristic(m, n, k32, n_mult=n_mult))
+
+
+def best_conv_blocks(op: str, ho: int, wo: int, f: int, k32: int,
+                     backend: str = "pallas") -> BlockConfig:
+    """Conv launches share the GEMM tuning table under the im2col-
+    equivalent key: a [N, HO, WO, C] conv with KH x KW filters is the
+    GEMM  M = HO*WO (rows per resident image), N = F (padded), K32 =
+    KH*KW*C32 (tap-major filter words) — see DESIGN.md SS7.  Only the
+    direct kernel (kernels/packed_conv.py) consumes these entries (it
+    blocks the F axis with ``bn``); the im2col fallback goes through
+    ops.binary_binary_dense and is tuned under its own
+    "popcount_gemm[+pack]" keys with the flattened patch-matrix shape.
+    op: "packed_conv" or "packed_conv+pack"."""
+    return best_blocks(op, ho * wo, f, k32, backend)
 
 
 def candidate_blocks(m: int, n: int, k32: int) -> Iterable[BlockConfig]:

@@ -10,11 +10,35 @@ one "eights" carry plane plus residues, and the expensive SWAR popcount
 runs once per group instead of once per word — ~3x less VPU work and no
 [bm, bn, bk32] XNOR cube in VMEM (one [bm, bn] plane at a time).
 
-Both the popcount GEMM (which carries the residues across K grid
-blocks in VMEM scratch) and the fused-MLP megakernel (which folds a
-whole layer's K in registers) build on these helpers; ref.py hosts the
-jnp oracle twin (`popcount_gemm_csa_ref`) benchmarked against the cube
-in benchmarks/kernels_bench.py.  Derivation: DESIGN.md §6.
+Three consumers build on these helpers: the popcount GEMM (residues
+threaded across K grid blocks in VMEM scratch), the fused-MLP
+megakernel (a whole layer's K folded in registers), and the packed
+conv kernel (one plane per window tap word — conv is a different
+gather in front of the identical reduction, DESIGN.md §7).  The
+historical [bm, bn, bk32]-cube kernel this restructuring replaced is
+gone from the tree; its jnp twin survives as `ref.popcount_gemm_ref`
+(the bit-exactness oracle) and is what kernels_bench.py races the CSA
+twin (`ref.popcount_gemm_csa_ref`) against.  Derivation: DESIGN.md §6.
+
+Inputs/outputs: all plane arguments are uint32 arrays of one common
+shape (any rank); `csa_fold` consumes a *list* of such planes plus the
+4-tuple state and returns the updated state; `csa_finalize` collapses
+the state to the int32 popcount total.
+
+Invariants / failure modes:
+* after every `csa_fold` call,
+  ``total = acc + pc(ones) + 2*pc(twos) + 4*pc(fours)`` — the state
+  may be cut at ANY K split (grid blocks, layer boundaries) and
+  resumed, which is what makes the VMEM-scratch threading sound;
+* a partial group (< 8 planes) is padded with zero planes, which add
+  nothing — callers never need to align their plane counts;
+* `pack_bit_planes` requires bn % 32 == 0 (it emits whole words) and
+  zeroes columns >= valid_n so its output satisfies the PackedArray
+  pad contract; the kernels guarantee the %32 by clamping bn UP for
+  pack_out launches;
+* `largest_divisor` raises ValueError (never asserts) when a dim is
+  not a multiple of the required alignment — the clear error legacy
+  raw-uint32 callers see instead of a block-divisibility assert.
 """
 from __future__ import annotations
 

@@ -20,10 +20,34 @@ zero pad bits (the PackedArray contract for the entry input; the
 valid_n mask for every scratch interface), weight pad words are zero,
 and the closed form dot = 2*(pc - (K_padded - K)) - K cancels the rest.
 
-Dispatch (fused_binary_mlp) estimates the VMEM footprint and falls back
-to the layer-by-layer fused path (ops.binary_binary_dense(pack_out=
-True)) when the stack cannot be resident — and for the "xla" backend,
-which keeps the bit-identical oracle semantics.
+Inputs/outputs: `fused_binary_mlp` takes a PackedArray [..., K0] (or
+raw uint32 words + explicit k), per-layer [N_l, K_l] PackedArray
+weights chained K_l == N_{l-1}, and one threshold per layer (static
+scalar, or per-channel int32 [N_l] — the folded-BN form from
+core.bnn_layers.fold_to_channel_thresholds); it returns the last
+layer's activations as a PackedArray [..., N_L].
+
+Invariants / failure modes:
+* every layer MUST have a threshold — without one the intermediate
+  would be int32 and could not stay packed in scratch (ValueError);
+* chain-width mismatches and weight/threshold count mismatches raise
+  ValueError before anything is traced;
+* scalar-vs-vector threshold classification is ops.classify_threshold,
+  shared with the chained fallback and both GEMM dispatches — the one
+  rule that keeps backends from drifting on 0-d/numpy spellings;
+* pad-bit correctness is inductive (entry input and every scratch
+  interface have zero pad bits; the §3 closed form cancels the rest),
+  so the megakernel's words are bit-identical to chaining
+  binary_binary_dense(pack_out=True), which is itself bit-identical to
+  the xla oracle (tests/test_fused.py);
+* dispatch estimates the resident footprint (_vmem_bytes) and falls
+  back to the layer-by-layer fused chain when the stack exceeds
+  VMEM_BUDGET_BYTES — a *silent* perf fallback, never a correctness
+  change — and always chains on "xla", the oracle backend.
+
+Unlike popcount_gemm, no CSA residue scratch is needed here: each
+layer's K is folded in full inside one grid step (the historical
+[bm, bn, bk32]-cube layout never existed in this kernel).
 """
 from __future__ import annotations
 
@@ -36,12 +60,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.autotune import best_blocks
-from repro.kernels.csa import csa_finalize, csa_fold, pack_bit_planes
+from repro.kernels.csa import (csa_finalize, csa_fold, largest_divisor,
+                               pack_bit_planes)
 from repro.kernels.ops import binary_binary_dense, classify_threshold
-from repro.kernels.packed import PackedArray, get_backend
-
-# leave headroom under the ~16 MB/core VMEM for pipelining and spills
-VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+from repro.kernels.packed import (VMEM_BUDGET_BYTES, PackedArray,
+                                  get_backend)
 
 LayerThreshold = Union[int, jax.Array]
 
@@ -223,8 +246,10 @@ def fused_binary_mlp(xp: Union[PackedArray, jax.Array],
         kw, k_logical = n_p // 32, n
 
     mp = be.pad_m(M)
-    bm = best_blocks("fused_mlp", mp, max(s[1] for s in shapes), w0,
-                     be.name).bm
+    # clamp the tuned bm to a divisor of the padded M like every other
+    # kernel — a stale table entry must not drop grid steps
+    bm = largest_divisor(mp, min(best_blocks(
+        "fused_mlp", mp, max(s[1] for s in shapes), w0, be.name).bm, mp))
     if _vmem_bytes(bm, w0, shapes) > VMEM_BUDGET_BYTES:
         return chained()              # stack too big to sit resident
 

@@ -31,14 +31,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.autotune import best_blocks
+from repro.kernels.autotune import best_conv_blocks, best_blocks
 from repro.kernels.pack import pack as _pack_kernel
 from repro.kernels.packed import (PackedArray, default_backend, get_backend)
+from repro.kernels import packed_conv as _pconv
+from repro.kernels.csa import largest_divisor
+from repro.kernels.packed_conv import (conv_vmem_bytes, im2col_words,
+                                       out_size, packed_conv2d,
+                                       pad_words_spatial)
 from repro.kernels.popcount_gemm import popcount_gemm as _pop_kernel
 from repro.kernels.xnor_gemm import xnor_gemm as _xnor_kernel
 
-__all__ = ["binarize_pack", "binary_binary_dense", "binary_dense",
-           "default_backend"]
+__all__ = ["binarize_pack", "binary_binary_dense", "binary_conv2d",
+           "binary_dense", "conv_padding", "default_backend"]
 
 Packable = Union[PackedArray, jax.Array]
 Threshold = Union[int, float, jax.Array]
@@ -248,3 +253,138 @@ def binary_binary_dense(xp: Packable, wp: Packable, k: Optional[int] = None,
     if pack_out:
         return binarize_pack(y, backend=backend)
     return y
+
+
+def conv_padding(padding: Union[str, int], kh: int, kw: int
+                 ) -> Tuple[int, int]:
+    """Symmetric per-side spatial pad: "same" (odd kernels; preserves
+    H/W at stride 1), "valid", or an explicit int."""
+    if padding == "same":
+        return (kh - 1) // 2, (kw - 1) // 2
+    if padding == "valid":
+        return 0, 0
+    if isinstance(padding, (int, np.integer)):
+        return int(padding), int(padding)
+    raise ValueError(f"padding must be 'same', 'valid', or an int, "
+                     f"got {padding!r}")
+
+
+def binary_conv2d(xp: PackedArray, wf: PackedArray, stride: int = 1,
+                  padding: Union[str, int] = "same",
+                  threshold: Optional[Threshold] = None,
+                  backend: Optional[str] = None,
+                  pack_out: bool = False, impl: str = "auto"):
+    """Fully-binary conv2d: channel-packed NHWC acts x packed filters.
+
+    xp: PackedArray [N, H, W, C] packed on the channel axis (-1);
+    wf: PackedArray [KH, KW, C, F] packed on the channel axis (-2).
+    Spatial padding is -1 padding (all-zero words — the only border a
+    pm1 bit code represents exactly; DESIGN.md SS7).
+
+    threshold: integer dot threshold, scalar or per-channel int32 [F]
+    (the folded-BN form) — output becomes {-1,+1} int32 on EVERY
+    backend.  pack_out: with threshold, emit the activations as a
+    channel-packed PackedArray [N, HO, WO, F] so the next binary conv
+    consumes them directly; on kernel backends this is FUSED (the
+    int32 NHWC activation never exists in HBM).
+
+    impl: "direct" (im2col-free sliding window, one VMEM-resident image
+    per grid step), "im2col" (word-granularity patch matrix through
+    popcount_gemm), or "auto" (default: direct unless the estimated
+    resident footprint exceeds the VMEM budget, then im2col — the same
+    silent perf fallback fused_mlp uses).  The xla backend runs the
+    jnp sign-conv oracle; all paths are bit-identical
+    (tests/test_conv.py).
+    """
+    if pack_out and threshold is None:
+        raise ValueError("pack_out requires a threshold (binary output)")
+    if impl not in ("auto", "direct", "im2col"):
+        raise ValueError(f"impl must be 'auto', 'direct', or 'im2col', "
+                         f"got {impl!r}")
+    if not isinstance(xp, PackedArray) or not isinstance(wf, PackedArray):
+        raise ValueError("binary_conv2d takes PackedArray operands "
+                         "(PackedArray.pack acts on axis -1, filters on "
+                         "axis 2 of [KH, KW, C, F])")
+    if xp.ndim != 4 or xp.axis != -1:
+        raise ValueError(f"activations must be [N, H, W, C] packed on "
+                         f"the channel axis, got ndim={xp.ndim} "
+                         f"axis={xp.axis}")
+    if wf.ndim != 4 or wf.axis != -2:
+        raise ValueError(f"filters must be [KH, KW, C, F] packed on the "
+                         f"channel axis (-2), got ndim={wf.ndim} "
+                         f"axis={wf.axis}")
+    if xp.length != wf.length:
+        raise ValueError(f"channel mismatch: activations C={xp.length} "
+                         f"vs filters C={wf.length}")
+    c = xp.length
+    kh, kw = wf.words.shape[0], wf.words.shape[1]
+    f = wf.words.shape[-1]
+    nb, h, w = xp.words.shape[0], xp.words.shape[1], xp.words.shape[2]
+    pad_h, pad_w = conv_padding(padding, kh, kw)
+    ho = out_size(h, kh, stride, pad_h)
+    wo = out_size(w, kw, stride, pad_w)
+    if ho <= 0 or wo <= 0:
+        raise ValueError(f"empty output: {h}x{w} conv {kh}x{kw} "
+                         f"stride {stride} pad {pad_h}")
+    be = get_backend(backend)
+
+    if not be.uses_kernels:
+        x = xp.unpack(jnp.float32)
+        wd = wf.unpack(jnp.float32)
+        y = ref.sign_conv2d_ref(x, wd, stride=stride, pad=pad_h,
+                                pad_w=pad_w)
+        if threshold is not None:
+            thr_s, tvec = _split_threshold(threshold, f, f)
+            thr = thr_s if tvec is None else tvec.astype(jnp.int32)
+            y = jnp.where(y >= thr, 1, -1).astype(jnp.int32)
+        return PackedArray.pack(y, axis=-1) if pack_out else y
+
+    # align the word counts (odd C: both sides pad to the same C32)
+    c32 = max(xp.n_words, wf.n_words)
+    xp = xp.pad_to(32 * c32)
+    wf = wf.pad_to(32 * c32)
+    xw = pad_words_spatial(xp.words, pad_h, pad_w)
+    ww = wf.words.reshape(kh * kw * c32, f)    # tap-major word order
+    fp = be.pad_n(f)
+    ww = _pad_dim(ww, fp, 1)
+    thr, tvec = _split_threshold(threshold, f, fp)
+    use_im2col = impl == "im2col"
+    if not use_im2col:
+        # tuning-table key only for the direct kernel — the im2col
+        # fallback re-keys under popcount_gemm via binary_binary_dense
+        op = "packed_conv+pack" if pack_out else "packed_conv"
+        blocks = best_conv_blocks(op, ho, wo, fp, kh * kw * c32, be.name)
+        # estimate with the bf the kernel will actually launch with
+        # (same clamp as packed_conv2d: up to 32 for pack_out, down to
+        # a divisor of the padded F)
+        bf_run = largest_divisor(
+            fp, min(max(blocks.bn, 32) if pack_out else blocks.bn, fp),
+            multiple_of=32 if pack_out else 1)
+        if impl == "auto" and conv_vmem_bytes(
+                xw.shape[1], xw.shape[2], c32, kh, kw, ho * wo,
+                bf_run) > _pconv.VMEM_BUDGET_BYTES:
+            use_im2col = True       # image/planes can't sit resident
+
+    if use_im2col:
+        patches = im2col_words(xw, kh, kw, stride, ho, wo)
+        # length counts the valid bits; the per-tap pad bits sit mid-row
+        # but the GEMM closed form only counts them (packed_conv.py) —
+        # this PackedArray is internal and never unpacked
+        xp2 = PackedArray(patches, length=kh * kw * c)
+        wp2 = PackedArray(ww[:, :f].T, length=kh * kw * c)
+        y = binary_binary_dense(xp2, wp2, threshold=threshold,
+                                pack_out=pack_out, backend=be.name)
+        if pack_out:
+            return PackedArray(y.words.reshape(nb, ho, wo, y.n_words),
+                               length=f, axis=-1)
+        return y.reshape(nb, ho, wo, f)
+
+    y = packed_conv2d(xw, ww, kh=kh, kw=kw, c=c, stride=stride,
+                      ho=ho, wo=wo, threshold=thr, threshold_vec=tvec,
+                      pack_out=pack_out, valid_f=f, bf=blocks.bn,
+                      interpret=be.interpret)
+    if pack_out:
+        nw = (f + 31) // 32
+        return PackedArray(y[:, :, :nw].reshape(nb, ho, wo, nw),
+                           length=f, axis=-1)
+    return y[:, :, :f].reshape(nb, ho, wo, f)

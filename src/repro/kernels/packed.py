@@ -37,6 +37,11 @@ import numpy as np
 PM1 = "pm1"        # bit 1 <-> +1, bit 0 <-> -1
 ZERO_ONE = "01"    # bit is the value
 
+# headroom under the ~16 MB/core VMEM for pipelining and spills — THE
+# residency budget every fused dispatch (fused_mlp stack residency,
+# packed_conv impl="auto") compares its footprint estimate against
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
 
 def round_up(n: int, m: int) -> int:
     return -(-n // m) * m

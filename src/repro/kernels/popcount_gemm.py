@@ -2,9 +2,11 @@
 XNOR + Harley-Seal carry-save popcount on the VPU.
 
 This is the literal TPU translation of the TULIP adder tree (§III), now
-run symbolically: instead of materializing the [bm, bn, bk32] XNOR cube
-and popcounting every word, the kernel streams one [bm, bn] XNOR plane
-per K-word through a carry-save adder network (kernels/csa.py), so the
+run symbolically: instead of materializing a [bm, bn, bk32] XNOR cube
+and popcounting every word (the removed original kernel's layout, kept
+only as the jnp oracle ref.popcount_gemm_ref), the kernel streams one
+[bm, bn] XNOR plane per K-word through a carry-save adder network
+(kernels/csa.py), so the
 SWAR popcount fires once per group of 8 planes — ~3x less VPU work and
 ~16x less live VMEM.  The CSA residues live in VMEM scratch and thread
 across K grid blocks.  Both operands move at 1 bit/value: 32x less

@@ -6,6 +6,8 @@ tree (plus its Pallas twin in kernels/pack.py, validated against it).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -57,3 +59,26 @@ def popcount_gemm_csa_ref(xp: jax.Array, wp: jax.Array,
 def pack_ref(x: jax.Array) -> jax.Array:
     """x: [M, K] -> [M, ceil(K/32)] uint32 (the canonical packer)."""
     return pack_words(x, axis=-1)
+
+
+def sign_conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+                    pad: int = 0, pad_w: Optional[int] = None) -> jax.Array:
+    """Dense sign-domain conv2d oracle (the allclose target for
+    kernels/packed_conv.py).
+
+    x: [N, H, W, C] +-1 values; w: [KH, KW, C, F] +-1 values.  Spatial
+    padding is **-1 padding** (the only border value a pm1 bit code can
+    represent — DESIGN.md SS7), applied symmetrically ``pad`` pixels per
+    side (``pad_w`` overrides the W axis for non-square kernels); the
+    conv itself is VALID with the given stride.  Returns the exact
+    int32 dot [N, HO, WO, F] (+-1 sums are small integers, exact in
+    float32 well below 2**24)."""
+    pad_w = pad if pad_w is None else pad_w
+    if pad or pad_w:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad_w, pad_w), (0, 0)),
+                    constant_values=-1.0)
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jnp.round(y).astype(jnp.int32)

@@ -246,6 +246,30 @@ def test_fused_mlp_threshold_forms_agree_across_backends():
         np.testing.assert_array_equal(np.asarray(o_i.words), base)
 
 
+def test_fused_mlp_clamps_tuned_bm():
+    """Regression: a stale tuning-table bm that does not divide the
+    padded M must be clamped like every other kernel's blocks — it
+    used to shrink the grid and silently leave output rows unwritten."""
+    rng = np.random.default_rng(17)
+    B, D, H = 100, 64, 32                      # pads to mp = 128
+    x = rng.normal(size=(B, D)).astype(np.float32)
+    wp = [PackedArray.pack(jnp.asarray(
+        rng.normal(size=(H, D)).astype(np.float32)))]
+    xp_x = binarize_pack(jnp.asarray(x), backend="xla")
+    want = fused_binary_mlp(xp_x, wp, [0], backend="xla")
+
+    tbl = get_table()
+    key = ("fused_mlp", "interpret", 128, 128, 2)   # mp, pad_n(H), w0
+    tbl.put(key, BlockConfig(bm=96, bn=128, bk32=2))
+    try:
+        xp_i = binarize_pack(jnp.asarray(x), backend="interpret")
+        got = fused_binary_mlp(xp_i, wp, [0], backend="interpret")
+        np.testing.assert_array_equal(np.asarray(got.words),
+                                      np.asarray(want.words))
+    finally:
+        tbl._entries.pop(key, None)
+
+
 def test_fused_mlp_validates_chain():
     rng = np.random.default_rng(0)
     xp = PackedArray.pack(jnp.asarray(_pm1(rng, 4, 64)))

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Intra-repo Markdown link checker (the CI docs gate).
+
+Scans ``[text](target)`` links in the given Markdown files and fails
+when a *relative* target does not resolve:
+
+* ``path`` / ``path#anchor`` → the file (or directory) must exist,
+  relative to the linking file's directory;
+* ``#anchor`` (same-file) and ``path#anchor`` → the target file must
+  contain a heading whose GitHub slug matches the anchor;
+* external schemes (http/https/mailto) are skipped — this gate is
+  about the repo's own docs never dangling, not the internet.
+
+Usage: python tools/check_links.py README.md DESIGN.md [...]
+Exit status 1 with one line per broken link, 0 when clean.
+"""
+from __future__ import annotations
+
+import re
+import sys
+import unicodedata
+from pathlib import Path
+
+LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation (keep word
+    chars/hyphens/spaces), spaces -> hyphens."""
+    text = re.sub(r"[`*_]|\[|\]|\(#?[^)]*\)", "", heading).strip()
+    text = unicodedata.normalize("NFKD", text).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    text = CODE_FENCE.sub("", md_path.read_text(encoding="utf-8"))
+    return {github_slug(h) for h in HEADING.findall(text)}
+
+
+def check_file(md_path: Path, repo_root: Path) -> list:
+    errors = []
+    text = CODE_FENCE.sub("", md_path.read_text(encoding="utf-8"))
+    for target in LINK.findall(text):
+        if target.startswith(EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = (md_path.parent / path_part).resolve()
+            try:
+                dest.relative_to(repo_root)
+            except ValueError:
+                errors.append(f"{md_path.name}: link escapes the repo: "
+                              f"{target}")
+                continue
+            if not dest.exists():
+                errors.append(f"{md_path.name}: missing target: {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if github_slug(anchor) not in anchors_of(dest):
+                    errors.append(f"{md_path.name}: missing anchor "
+                                  f"#{anchor} in {path_part}")
+        elif anchor:
+            if github_slug(anchor) not in anchors_of(md_path):
+                errors.append(f"{md_path.name}: missing same-file "
+                              f"anchor #{anchor}")
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]")
+        return 2
+    repo_root = Path(__file__).resolve().parent.parent
+    errors = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p.resolve(), repo_root))
+    for e in errors:
+        print(f"BROKEN LINK  {e}")
+    if not errors:
+        print(f"link check OK ({len(argv)} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
