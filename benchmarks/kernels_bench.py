@@ -32,6 +32,7 @@ _HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT_OUT = os.path.join(_HERE, "BENCH_kernels.json")
 FUSED_OUT = os.path.join(_HERE, "BENCH_fused.json")
 CONV_OUT = os.path.join(_HERE, "BENCH_conv.json")
+COMPILE_OUT = os.path.join(_HERE, "BENCH_compile.json")
 
 
 def model_bytes(m, k, n):
@@ -332,6 +333,103 @@ def run_conv(log=print, out_json=CONV_OUT, smoke=False):
     return out
 
 
+def run_compile(log=print, out_json=COMPILE_OUT, smoke=False):
+    """The graph compiler front door (ISSUE 4 acceptance).
+
+    Per paper workload: the compiled plan's lowering decisions, the
+    launch count vs the legacy layer-by-layer chain, the HBM byte
+    model, and the Table III reproduction from the same spec.  Gate:
+    on a small spec, the compiled executable must be BIT-IDENTICAL
+    across every backend available on this host AND between the fused
+    plan and a fully-chained plan (vmem_budget=0 disables megakernel
+    segmentation) — raises on divergence (the CI smoke job runs
+    exactly this)."""
+    from repro import graph
+    from repro.core.mapping import table3_rows
+    from repro.core.workloads import alexnet_imagenet, binarynet_cifar10
+
+    backends = ["xla", "interpret"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+    log(f"\n== compile(spec) pipeline (backends checked: {backends}) ==")
+
+    # -- bit-identity gate on a small spec ---------------------------- #
+    spec = graph.BNNSpec("bench_small", (8, 8, 32), (
+        graph.Binarize("b"),
+        graph.BinaryConv("c1", 3, 3, 32, 64, 8, 8, 8, 8, 1, 1),
+        graph.BNThreshold("c1.bn", 64),
+        graph.MaxPool("p1", 2, 2),
+        graph.BinaryDense("d1", 4 * 4 * 64, 64),
+        graph.BNThreshold("d1.bn", 64),
+        graph.BinaryDense("d2", 64, 64),
+        graph.BNThreshold("d2.bn", 64),
+        graph.BinaryDense("d3", 64, 16),
+        graph.Logits("logits", 16)))
+    params = graph.compile(spec).init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 32),
+                          jnp.float32)
+    outs = {}
+    for be in backends:
+        fused = graph.compile(spec, backend=be, batch=2)
+        chained = graph.compile(spec, backend=be, batch=2,
+                                vmem_budget=0)
+        assert any(s.kind == "fused_stack" for s in fused.plan)
+        assert not any(s.kind == "fused_stack" for s in chained.plan)
+        a = np.asarray(fused.apply(params, x))
+        b = np.asarray(chained.apply(params, x))
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"fused plan != chained plan on {be}")
+        outs[be] = a
+    for be in backends[1:]:
+        np.testing.assert_array_equal(
+            outs[be], outs[backends[0]],
+            err_msg=f"compiled path diverges on {be}")
+    log(f"bit-identity gate OK (fused vs chained plan, {backends})")
+
+    # -- per-workload plan decisions + byte model --------------------- #
+    rows = []
+    for wl in (binarynet_cifar10(), alexnet_imagenet()):
+        cb = graph.compile(wl)
+        tr = cb.traffic(batch=1)
+        t3_ok = cb.table3_rows() == table3_rows(wl)
+        assert t3_ok, f"{wl.name}: tulip_mapping diverges from Table III"
+        row = {
+            "name": wl.name,
+            "launches_compiled": cb.launch_count(),
+            "launches_legacy": cb.legacy_launch_count(),
+            "plan": [str(s) for s in cb.plan],
+            "conv_impls": [s.args["impl"] for s in cb.plan
+                           if s.kind == "binary_conv"],
+            "hbm_packed_bytes": tr["packed_bytes"],
+            "hbm_bf16_bytes": tr["bf16_bytes"],
+            "hbm_ratio": tr["ratio_bf16_over_packed"],
+            "table3_matches_mapping": t3_ok,
+            "tuning_keys_prefetched": len(cb.tuning_keys),
+        }
+        if wl.name == "BinaryNet" and not smoke:
+            p = cb.init(jax.random.PRNGKey(2))
+            img = jax.random.normal(jax.random.PRNGKey(3),
+                                    (1, 32, 32, 3), jnp.float32)
+            cbx = graph.compile(wl, backend="xla")
+            row["forward_xla_s"] = _wall(cbx.apply, p, img)
+        rows.append(row)
+        log(f"{wl.name:>10s} | {row['launches_compiled']} launches "
+            f"(legacy {row['launches_legacy']}) | HBM "
+            f"{tr['packed_bytes'] / 1e6:.1f}MB packed vs "
+            f"{tr['bf16_bytes'] / 1e6:.1f}MB bf16 "
+            f"({tr['ratio_bf16_over_packed']:.1f}x) | Table III OK | "
+            f"{row['tuning_keys_prefetched']} autotune keys")
+
+    out = {"host_backend": jax.default_backend(),
+           "backends_checked": backends, "smoke": smoke,
+           "workloads": rows}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        log(f"wrote {out_json}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
@@ -345,8 +443,13 @@ if __name__ == "__main__":
     ap.add_argument("--conv", action="store_true",
                     help="benchmark the packed binary conv2d datapath "
                          "(fails on any direct/im2col/oracle divergence)")
+    ap.add_argument("--compile", action="store_true",
+                    help="benchmark the graph compile(spec) pipeline "
+                         "(fails on fused-vs-chained or cross-backend "
+                         "divergence, or a Table III mismatch)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small shapes for CI (with --fused/--conv)")
+                    help="small shapes for CI (with "
+                         "--fused/--conv/--compile)")
     args = ap.parse_args()
     if args.fused:
         dest = FUSED_OUT if args.out is None else (args.out or None)
@@ -354,6 +457,9 @@ if __name__ == "__main__":
     elif args.conv:
         dest = CONV_OUT if args.out is None else (args.out or None)
         run_conv(out_json=dest, smoke=args.smoke)
+    elif args.compile:
+        dest = COMPILE_OUT if args.out is None else (args.out or None)
+        run_compile(out_json=dest, smoke=args.smoke)
     else:
         dest = DEFAULT_OUT if args.out is None else (args.out or None)
         run(out_json=dest)

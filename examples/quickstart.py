@@ -4,13 +4,15 @@
 2. The same math as a binarized LM layer (the TPU framework): latent
    weights -> sign/STE train path -> PackedArray serving path, all
    producing identical results.
-3. A fully-binary 3-layer MLP whose activations STAY packed between
-   layers (binarize_pack -> binary_binary_dense -> ... , no bf16
-   round-trip — the paper's keep-everything-1-bit datapath).
+3. A fully-binary 3-layer MLP through the graph compiler: one
+   compile(spec) call plans the megakernel segmentation and the
+   activations STAY packed between layers (no bf16 round-trip — the
+   paper's keep-everything-1-bit datapath).
 4. The paper's headline workload: one packed binary conv layer, then
-   the whole BinaryNet CIFAR-10 forward pass built straight from the
-   Workload dataclass, with the HBM bytes moved vs the bf16
-   equivalent.
+   the whole BinaryNet CIFAR-10 net compiled straight from the
+   Workload dataclass — forward pass, lowering plan, HBM bytes moved
+   vs the bf16 equivalent, and the TULIP-PE mapping from the SAME
+   compiled spec.
 5. A whole (reduced) assigned LM architecture with binarized weights.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -24,7 +26,7 @@ from repro.core.binarize import PackedArray, xnor_popcount_dot
 from repro.core.bnn_layers import apply_folded, quantize_for_serving
 from repro.core.tulip_pe import run_numpy
 from repro.configs import get_arch, reduced
-from repro.kernels.ops import binarize_pack, binary_binary_dense
+from repro.kernels.ops import binarize_pack
 from repro.models import init_params, loss_fn
 
 # --- 1. the ASIC: a 96-input binary neuron on one TULIP-PE ----------
@@ -54,38 +56,40 @@ y = apply_folded(xnor_popcount_dot(PackedArray.pack(xs), wp), fold)
 print(f"[framework] packed XNOR-popcount serving layer: out shape "
       f"{y.shape}, values in {set(np.unique(np.asarray(y)))} ✓")
 
-# --- 3. fully-binary 3-layer MLP: activations stay packed -----------
+# --- 3. fully-binary 3-layer MLP through the graph compiler ---------
+from repro import graph
+
 D, H, O = 256, 192, 16
 x = rng.normal(size=(8, D)).astype(np.float32)
 Ws = [rng.normal(size=(H, D)), rng.normal(size=(H, H)),
       rng.normal(size=(O, H))]
-Wp = [PackedArray.pack(jnp.asarray(wi.astype(np.float32)), axis=-1)
-      for wi in Ws]
-hp = binarize_pack(jnp.asarray(x))                       # PackedArray
-for wi in Wp[:-1]:
-    # XNOR+popcount+threshold, output re-packed: 1 bit end-to-end
-    hp = binary_binary_dense(hp, wi, threshold=0, pack_out=True)
-    assert isinstance(hp, PackedArray)
-logits = binary_binary_dense(hp, Wp[-1])                 # int32 [8, O]
-# the same hidden stack as ONE megakernel launch (activations VMEM-
-# resident across layers on kernel backends — the TULIP-PE schedule)
-from repro.kernels.fused_mlp import fused_binary_mlp
-hp_mega = fused_binary_mlp(binarize_pack(jnp.asarray(x)), Wp[:-1], [0, 0])
-assert (np.asarray(hp_mega.words) == np.asarray(hp.words)).all()
+spec = graph.from_dense_stack(D, [H, H, O], logits=True, name="mlp3")
+mlp = graph.compile(spec, batch=8)
+mparams = {"fc": [
+    {"wp": PackedArray.pack(jnp.asarray(wi.astype(np.float32)),
+                            axis=-1), "t": 0}
+    for wi in Ws[:-1]] + [
+    {"wp": PackedArray.pack(jnp.asarray(Ws[-1].astype(np.float32)),
+                            axis=-1)}]}
+logits = mlp.apply(mparams, binarize_pack(jnp.asarray(x)))
+# the plan fused the thresholded hidden stack into ONE megakernel
+# launch (activations VMEM-resident across layers on kernel backends
+# — the TULIP-PE schedule); the classifier head breaks the segment
+assert [s.kind for s in mlp.plan if s.kind in ("fused_stack", "dense")
+        ] == ["fused_stack", "dense"]
 h = np.where(x > 0, 1.0, -1.0)
 for wi in Ws[:-1]:
     h = np.where(h @ np.where(wi > 0, 1.0, -1.0).T >= 0, 1.0, -1.0)
 ref_logits = h @ np.where(Ws[-1] > 0, 1.0, -1.0).T
 assert (np.asarray(logits) == ref_logits).all()
-print(f"[framework] 3-layer fully-binary MLP, activations packed "
-      f"between layers ({D}->{H}->{H}->{O}), == float sign-net ✓")
+print(f"[compile] 3-layer fully-binary MLP via graph.compile "
+      f"({D}->{H}->{H}->{O}): {mlp.launch_count()} launches vs "
+      f"{mlp.legacy_launch_count()} chained, == float sign-net ✓")
 
-# --- 4. packed binary conv + the BinaryNet CIFAR-10 workload --------
+# --- 4. packed binary conv + the compiled BinaryNet workload --------
 from repro.core.bnn_layers import maxpool_packed
 from repro.core.workloads import binarynet_cifar10
 from repro.kernels.ops import binary_conv2d
-from repro.models.layers import (packed_cnn_apply, packed_cnn_init,
-                                 packed_cnn_traffic)
 
 # one conv3-sized BinaryNet layer: channel-packed NHWC in, fused
 # threshold->pack epilogue out — the int32 NHWC activation never
@@ -105,18 +109,28 @@ print(f"[conv] binary conv {cc}->{ff} + OR-pool: {ap.nbytes + out.nbytes}"
       f"({bf16_bytes // (ap.nbytes + out.nbytes)}x less), out "
       f"{pooled.shape} still packed ✓")
 
-# the whole BinaryNet CIFAR-10 net, instantiated from the Workload rows
+# the whole BinaryNet CIFAR-10 net, COMPILED from the Workload rows:
+# one spec drives the executable, the byte model, and the ASIC mapping
 wl = binarynet_cifar10()
-cnn = packed_cnn_init(jax.random.PRNGKey(3), wl)
+cbn = graph.compile(wl)
+cnn = cbn.init(jax.random.PRNGKey(3))
 img = jax.random.normal(jax.random.PRNGKey(4), (1, 32, 32, 3),
                         jnp.float32)
-logits = packed_cnn_apply(cnn, img, wl)
-tr = packed_cnn_traffic(wl, batch=1)
-print(f"[conv] BinaryNet CIFAR-10 forward (6 conv + 3 fc, "
-      f"{wl.total_ops / 1e6:.0f} MOp): logits {logits.shape}, HBM "
+logits = cbn.apply(cnn, img)
+tr = cbn.traffic(batch=1)
+pe_rows = [r for r in cbn.tulip_mapping() if r["kind"] == "conv"
+           and r["mapping"].uses_pe]
+print(f"[compile] BinaryNet CIFAR-10 compiled (6 conv + 3 fc, "
+      f"{wl.total_ops / 1e6:.0f} MOp): logits {logits.shape}, "
+      f"{cbn.launch_count()} launches (legacy "
+      f"{cbn.legacy_launch_count()}), HBM "
       f"{tr['packed_bytes'] / 1e6:.1f}MB packed vs "
       f"{tr['bf16_bytes'] / 1e6:.1f}MB bf16 "
-      f"({tr['ratio_bf16_over_packed']:.1f}x) ✓")
+      f"({tr['ratio_bf16_over_packed']:.1f}x), "
+      f"{len(pe_rows)} conv layers on the TULIP-PEs ✓")
+print("[compile] lowering plan:")
+for s in cbn.plan:
+    print(f"    {s}")
 
 # --- 5. a whole (reduced) assigned architecture, binarized ----------
 cfg = reduced(get_arch("mixtral-8x22b")).replace(dtype="float32")

@@ -147,23 +147,19 @@ def fold_conv_to_channel_thresholds(wf: PackedArray, fold: FoldedThreshold
 
 
 def bnn_mlp_serve_folded(xp, layers, backend=None) -> PackedArray:
-    """Serve a stack of folded binary layers through the megakernel.
+    """DEPRECATED shim over the graph compiler
+    (repro.graph.compile.serve_folded_stack).
 
     layers: sequence of (wp PackedArray [N, K], FoldedThreshold) pairs
     as produced by quantize_for_serving.  Each fold is rewritten to the
-    per-channel threshold-vector form (fold_to_channel_thresholds) and
-    the whole stack runs VMEM-resident in one pallas_call on kernel
-    backends (kernels/fused_mlp.py) — activations stay 1-bit from the
-    first layer's input to the last layer's output, the TULIP-PE
-    schedule end to end."""
-    from repro.kernels.fused_mlp import fused_binary_mlp
+    per-channel threshold-vector form (fold_to_channel_thresholds) at
+    param-bind time and the compiled plan segments the stack into
+    VMEM-resident megakernel launches (kernels/fused_mlp.py) —
+    activations stay 1-bit from the first layer's input to the last
+    layer's output, the TULIP-PE schedule end to end."""
+    from repro.graph.compile import serve_folded_stack
 
-    ws, tvecs = [], []
-    for wp, fold in layers:
-        w2, tv = fold_to_channel_thresholds(wp, fold)
-        ws.append(w2)
-        tvecs.append(tv)
-    return fused_binary_mlp(xp, ws, tvecs, backend=backend)
+    return serve_folded_stack(xp, layers, backend=backend)
 
 
 def quantize_for_serving(w, mu, sigma, gamma, beta, eps: float = 1e-5):

@@ -1,0 +1,227 @@
+"""The compile passes: BNNSpec -> executable plan (DESIGN.md §8).
+
+``build_plan`` runs the explicit lowering pipeline over a validated
+spec and returns a tuple of :class:`PlanStep`:
+
+  (2) threshold folding  — every BNThreshold is fused into its
+      producer's threshold->pack epilogue (the folded-BN comparator of
+      §IV-D; gamma<0 row negation happens at param-bind time through
+      core.bnn_layers.fold_*_to_channel_thresholds);
+  (3) dense-run segmentation — contiguous thresholded BinaryDense runs
+      are greedily packed into fused_mlp megakernel launches under the
+      VMEM budget (kernels.fused_mlp.stack_plan, THE shared
+      residency rule), falling back to chained per-layer launches;
+  (4) conv impl selection — direct vs im2col via the VMEM-residency
+      estimate (kernels.ops.plan_conv_launch, shared with dispatch);
+  (5) autotune prefetch — every planned kernel launch resolves its
+      tuning-table key up front (kernels.autotune memoizes), and the
+      keys are recorded on the steps.
+
+Every step carries a human-readable ``detail`` string: ``CompiledBNN.
+describe()`` is the paper's mapping algorithm made inspectable.
+
+The plan is computed for a ``batch`` row hint; launch *decisions* that
+depend on the row count (fused-vs-chained residency) are re-checked by
+the kernels at trace time with the actual rows, and both outcomes are
+bit-identical — the plan can only ever differ from execution in
+performance, never in bits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+from repro.graph.ir import (Binarize, BinaryConv, BinaryDense, BNNSpec,
+                            BNThreshold, IntegerEntry, Logits, MaxPool)
+from repro.kernels.fused_mlp import stack_plan
+from repro.kernels.ops import plan_conv_launch, plan_dense_launch
+
+__all__ = ["PlanStep", "build_plan"]
+
+
+@dataclass(frozen=True)
+class PlanStep:
+    """One executable step + the lowering decision that produced it.
+
+    kind: integer_conv | float_pool | binarize | binary_conv |
+          packed_pool | flatten | fused_stack | dense | logits
+    args: static operands for the executor (param indices, geometry,
+          impl choices);  keys: autotune keys prefetched for the step.
+    """
+    kind: str
+    name: str
+    args: dict = field(default_factory=dict)
+    detail: str = ""
+    keys: Tuple[tuple, ...] = ()
+
+    def __str__(self) -> str:
+        return f"{self.kind:<13s} {self.name:<18s} {self.detail}"
+
+
+def _fmt_mb(b: int) -> str:
+    return f"{b / 1e6:.2f}MB"
+
+
+def _segment_dense_run(run, k0: int, batch: int,
+                       backend: Optional[str], budget: Optional[int]):
+    """Pass 3: greedily grow megakernel segments over a contiguous run
+    of thresholded dense layers; each segment must sit VMEM-resident
+    (weights + ping-pong activation buffers + per-channel threshold
+    vectors where the spec declares them) under the budget."""
+    steps = []
+    i = 0
+    while i < len(run):
+        ns, tvs, j = [], [], i
+        sp = None
+        while j < len(run):
+            cand = ns + [run[j][1].n_out]
+            cand_tv = tvs + [run[j][2].per_channel]
+            trial = stack_plan(batch, k0, cand, cand_tv,
+                               backend=backend, budget=budget)
+            if not trial["fits"]:
+                break
+            ns, tvs, sp, j = cand, cand_tv, trial, j + 1
+        if j == i:                     # single layer exceeds the budget
+            fc_idx, nd, _ = run[i]
+            d = plan_dense_launch(batch, nd.n_out, nd.n_in,
+                                  backend=backend, pack_out=True)
+            steps.append(PlanStep(
+                "dense", nd.name,
+                {"fc_idx": fc_idx, "thresholded": True, "pack_out": True},
+                f"{nd.n_in}->{nd.n_out} chained launch (layer alone "
+                f"exceeds the VMEM budget; threshold->pack fused)",
+                (d["key"],)))
+            k0 = nd.n_out
+            i += 1
+        elif j - i == 1:               # fusing one layer buys nothing
+            fc_idx, nd, _ = run[i]
+            d = plan_dense_launch(batch, nd.n_out, nd.n_in,
+                                  backend=backend, pack_out=True)
+            steps.append(PlanStep(
+                "dense", nd.name,
+                {"fc_idx": fc_idx, "thresholded": True, "pack_out": True},
+                f"{nd.n_in}->{nd.n_out} single launch (segment of one; "
+                f"threshold->pack fused)", (d["key"],)))
+            k0 = nd.n_out
+            i = j
+        else:
+            idxs = tuple(fc for fc, _, _ in run[i:j])
+            names = " -> ".join(str(nd.n_out) for _, nd, _ in run[i:j])
+            steps.append(PlanStep(
+                "fused_stack", run[i][1].name,
+                {"fc_indices": idxs},
+                f"megakernel over {j - i} layers ({k0}->{names}), "
+                f"activations VMEM-resident "
+                f"({_fmt_mb(sp['vmem_bytes'])} of budget), "
+                f"1 launch vs {j - i} chained", (sp["key"],)))
+            k0 = run[j - 1][1].n_out
+            i = j
+    return steps
+
+
+def build_plan(spec: BNNSpec, backend: Optional[str] = None,
+               vmem_budget: Optional[int] = None, batch: int = 1,
+               conv_impl: str = "auto") -> Tuple[PlanStep, ...]:
+    """Run passes 2-5 over a validated spec (see module docstring)."""
+    if conv_impl not in ("auto", "direct", "im2col"):
+        raise ValueError(f"conv_impl must be 'auto', 'direct', or "
+                         f"'im2col', got {conv_impl!r}")
+    steps = []
+    conv_i = fc_i = 0
+    domain = "float" if len(spec.input_shape) == 3 else "packed_flat"
+    h, w = (spec.input_shape[:2] if domain == "float" else (0, 0))
+    nodes = spec.nodes
+    i = 0
+    while i < len(nodes):
+        nd = nodes[i]
+        if isinstance(nd, IntegerEntry):
+            steps.append(PlanStep(
+                "integer_conv", nd.name,
+                {"conv_idx": conv_i, "stride": nd.stride, "pad": nd.pad},
+                f"float NHWC conv {nd.c_in}->{nd.c_out} k{nd.kh} "
+                f"s{nd.stride} p{nd.pad}, alpha*sign(w) on the MXU "
+                f"(XLA, real zero padding)"))
+            conv_i += 1
+            h, w = nd.h_out, nd.w_out
+        elif isinstance(nd, Binarize):
+            steps.append(PlanStep(
+                "binarize", nd.name, {"flatten": nd.flatten},
+                "flatten + sign+pack to 1 bit/value" if nd.flatten else
+                "sign+pack NHWC channels to 1 bit/value"))
+            domain = "packed_flat" if nd.flatten else "packed_conv"
+        elif isinstance(nd, BinaryConv):
+            d = plan_conv_launch(
+                h, w, nd.c_in, nd.c_out, nd.kh, nd.kw, stride=nd.stride,
+                padding=nd.pad, backend=backend, pack_out=True,
+                impl=conv_impl, vmem_budget=vmem_budget, nb=batch)
+            thr = nodes[i + 1]         # BNThreshold, by validation
+            why = "forced" if conv_impl != "auto" else (
+                f"resident {_fmt_mb(d['vmem_bytes'])} "
+                + ("> budget" if d["impl"] == "im2col" else "fits"))
+            steps.append(PlanStep(
+                "binary_conv", nd.name,
+                {"conv_idx": conv_i, "stride": nd.stride, "pad": nd.pad,
+                 "impl": d["impl"]},
+                f"packed conv {nd.c_in}->{nd.c_out} k{nd.kh} "
+                f"s{nd.stride} p{nd.pad}, impl={d['impl']} ({why}); "
+                f"{thr.name} folded into the threshold->pack epilogue",
+                (d["key"],) if "key" in d else ()))
+            conv_i += 1
+            h, w = nd.h_out, nd.w_out
+            i += 1                     # consume the fused BNThreshold
+        elif isinstance(nd, MaxPool):
+            if domain == "packed_conv":
+                steps.append(PlanStep(
+                    "packed_pool", nd.name,
+                    {"window": nd.window, "stride": nd.stride},
+                    f"max {nd.window}x{nd.window}/s{nd.stride} as "
+                    f"bitwise OR on packed words (sign is monotonic)"))
+            else:
+                steps.append(PlanStep(
+                    "float_pool", nd.name,
+                    {"window": nd.window, "stride": nd.stride},
+                    f"float max-pool {nd.window}x{nd.window}"
+                    f"/s{nd.stride} (reduce_window)"))
+            h = (h - nd.window) // nd.stride + 1
+            w = (w - nd.window) // nd.stride + 1
+        elif isinstance(nd, BinaryDense):
+            if domain == "packed_conv":
+                steps.append(PlanStep(
+                    "flatten", f"flatten@{nd.name}", {"n_in": nd.n_in},
+                    f"word-level reshape [N,H,W,C/32] -> [N, "
+                    f"{nd.n_in}/32] (no unpacking; C%32==0 required)"))
+                domain = "packed_flat"
+            # gather the maximal contiguous thresholded dense run
+            run, k0 = [], nd.n_in
+            while i < len(nodes) and isinstance(nodes[i], BinaryDense) \
+                    and i + 1 < len(nodes) \
+                    and isinstance(nodes[i + 1], BNThreshold):
+                run.append((fc_i, nodes[i], nodes[i + 1]))
+                fc_i += 1
+                i += 2                 # skip the fused BNThreshold
+            if run:
+                steps.extend(_segment_dense_run(
+                    run, k0, batch, backend, vmem_budget))
+            if i < len(nodes) and isinstance(nodes[i], BinaryDense):
+                tail = nodes[i]        # un-thresholded (Logits) tail
+                d = plan_dense_launch(batch, tail.n_out, tail.n_in,
+                                      backend=backend, pack_out=False)
+                steps.append(PlanStep(
+                    "dense", tail.name,
+                    {"fc_idx": fc_i, "thresholded": False,
+                     "pack_out": False},
+                    f"{tail.n_in}->{tail.n_out} int32 dot (no "
+                    f"threshold: classifier head)", (d["key"],)))
+                fc_i += 1
+                i += 1
+            continue                   # i already advanced past the run
+        elif isinstance(nd, BNThreshold):
+            raise AssertionError(f"{nd.name}: BNThreshold not consumed "
+                                 f"by its producer (validate() should "
+                                 f"have caught this)")
+        elif isinstance(nd, Logits):
+            steps.append(PlanStep(
+                "logits", nd.name, {},
+                f"int32 dot -> float32 logits [{nd.classes}]"))
+        i += 1
+    return tuple(steps)

@@ -165,11 +165,52 @@ def _vmem_bytes(bm: int, w0: int, shapes) -> int:
     return weights + tvecs + 2 * bm * buf_words * 4 + planes
 
 
+def stack_plan(m: int, k0: int, ns: Sequence[int],
+               has_tvec: Sequence[bool], backend: Optional[str] = None,
+               budget: Optional[int] = None,
+               w0: Optional[int] = None) -> dict:
+    """Static geometry + residency decision for one fused-stack launch.
+
+    THE megakernel-vs-chained rule: ``fused_binary_mlp`` routes its own
+    fallback through this (so does the graph compiler's dense-run
+    segmentation pass, which is how the plan can never disagree with
+    what dispatch does at trace time).  ``m`` rows of a ``k0``-bit
+    input through layers of widths ``ns``; ``has_tvec[l]`` marks
+    per-channel (vector) thresholds, which cost extra resident bytes.
+    Non-kernel backends plan under the "pallas" spec (the deployment
+    target).  Returns mp/bm/w0, the per-layer geometry tuples
+    ``(kw, n_p, k_logical, n, None, has_tvec)``, the footprint
+    estimate, whether it fits the budget, and the fused_mlp tuning key.
+    """
+    be = get_backend(backend)
+    kb = be if be.uses_kernels else get_backend("pallas")
+    if w0 is None:
+        w0 = (k0 + 31) // 32
+    geom = []
+    kw, k_logical = w0, k0
+    for n, tv in zip(ns, has_tvec):
+        n_p = kb.pad_n(n)
+        geom.append((kw, n_p, k_logical, n, None, bool(tv)))
+        kw, k_logical = n_p // 32, n
+    mp = kb.pad_m(m)
+    n_max = max(g[1] for g in geom)
+    # clamp the tuned bm to a divisor of the padded M like every other
+    # kernel — a stale table entry must not drop grid steps
+    bm = largest_divisor(mp, min(best_blocks(
+        "fused_mlp", mp, n_max, w0, kb.name).bm, mp))
+    vmem = _vmem_bytes(bm, w0, geom)
+    budget = VMEM_BUDGET_BYTES if budget is None else budget
+    return {"mp": mp, "bm": bm, "w0": w0, "geom": tuple(geom),
+            "vmem_bytes": vmem, "fits": vmem <= budget,
+            "key": ("fused_mlp", kb.name, mp, n_max, w0)}
+
+
 def fused_binary_mlp(xp: Union[PackedArray, jax.Array],
                      weights: Sequence[PackedArray],
                      thresholds: Sequence[LayerThreshold],
                      k: Optional[int] = None,
-                     backend: Optional[str] = None) -> PackedArray:
+                     backend: Optional[str] = None,
+                     vmem_budget: Optional[int] = None) -> PackedArray:
     """Run a stack of fully-binary thresholded dense layers fused.
 
     xp: PackedArray [..., K0] packed on the last axis (or raw uint32
@@ -226,32 +267,26 @@ def fused_binary_mlp(xp: Union[PackedArray, jax.Array],
     if not be.uses_kernels:
         return chained()
 
-    # ---- static stack geometry ------------------------------------- #
+    # ---- static stack geometry (shared with the graph compiler) ---- #
     lead = xp.words.shape[:-1]
     x2 = xp.words.reshape(-1, xp.n_words)
     M = x2.shape[0]
-    w0 = max(xp.n_words, ws[0].n_words)
-    shapes = []                       # (kw, n_p, k_logical, valid, thr,
-    kw = w0                           #  has_tvec) per layer
-    tvec_ops = []
-    k_logical = xp.length
-    for w, t in zip(ws, thresholds):
-        n = w.words.shape[0]
-        n_p = be.pad_n(n)
-        has_tvec = not isinstance(t, (int, float))  # normalized above
-        shapes.append((kw, n_p, k_logical, n, None if has_tvec else t,
-                       has_tvec))
-        if has_tvec:
-            tvec_ops.append(jnp.pad(t, (0, n_p - n)).reshape(1, n_p))
-        kw, k_logical = n_p // 32, n
-
-    mp = be.pad_m(M)
-    # clamp the tuned bm to a divisor of the padded M like every other
-    # kernel — a stale table entry must not drop grid steps
-    bm = largest_divisor(mp, min(best_blocks(
-        "fused_mlp", mp, max(s[1] for s in shapes), w0, be.name).bm, mp))
-    if _vmem_bytes(bm, w0, shapes) > VMEM_BUDGET_BYTES:
+    has_tvec = [not isinstance(t, (int, float))      # normalized above
+                for t in thresholds]
+    sp = stack_plan(M, xp.length, ns, has_tvec, backend=be.name,
+                    budget=vmem_budget,
+                    w0=max(xp.n_words, ws[0].n_words))
+    if not sp["fits"]:
         return chained()              # stack too big to sit resident
+    mp, bm, w0 = sp["mp"], sp["bm"], sp["w0"]
+    # inject the static scalar thresholds into the geometry tuples
+    # (vector thresholds travel as operands instead)
+    shapes = [(kw, n_p, kl, n, None if tv else t, tv)
+              for (kw, n_p, kl, n, _, tv), t in zip(sp["geom"],
+                                                    thresholds)]
+    tvec_ops = [jnp.pad(t, (0, n_p - n)).reshape(1, n_p)
+                for (_, n_p, _, n, _, tv), t in zip(shapes, thresholds)
+                if tv]
 
     # ---- operands (zero padding everywhere: §3 closed form) --------- #
     x2p = jnp.pad(x2, ((0, mp - M), (0, w0 - x2.shape[1])))

@@ -33,7 +33,8 @@ import numpy as np
 from repro.kernels import ref
 from repro.kernels.autotune import best_conv_blocks, best_blocks
 from repro.kernels.pack import pack as _pack_kernel
-from repro.kernels.packed import (PackedArray, default_backend, get_backend)
+from repro.kernels.packed import (PackedArray, adopt_packed,
+                                  default_backend, get_backend, round_up)
 from repro.kernels import packed_conv as _pconv
 from repro.kernels.csa import largest_divisor
 from repro.kernels.packed_conv import (conv_vmem_bytes, im2col_words,
@@ -43,7 +44,8 @@ from repro.kernels.popcount_gemm import popcount_gemm as _pop_kernel
 from repro.kernels.xnor_gemm import xnor_gemm as _xnor_kernel
 
 __all__ = ["binarize_pack", "binary_binary_dense", "binary_conv2d",
-           "binary_dense", "conv_padding", "default_backend"]
+           "binary_dense", "conv_padding", "default_backend",
+           "plan_conv_launch", "plan_dense_launch"]
 
 Packable = Union[PackedArray, jax.Array]
 Threshold = Union[int, float, jax.Array]
@@ -58,15 +60,13 @@ def _pad_dim(x: jax.Array, target: int, axis: int) -> jax.Array:
 
 
 def _adopt_rows(a: Packable, k: Optional[int]) -> PackedArray:
-    """Normalize to the row-major packed layout ([..., K/32], axis -1)."""
-    if isinstance(a, PackedArray):
-        if k is not None and a.length != k:
-            raise ValueError(f"explicit k={k} disagrees with "
-                             f"PackedArray.length={a.length}")
-        return a.move_pack_axis_last()
-    if k is None:
+    """Normalize to the row-major packed layout ([..., K/32], axis -1).
+    Raw uint32 words go through THE shared adoption/deprecation path
+    (kernels.packed.adopt_packed)."""
+    if not isinstance(a, PackedArray) and k is None:
         raise ValueError("raw packed words need an explicit k")
-    return PackedArray(jnp.asarray(a), length=k, axis=-1)
+    return adopt_packed(a, length=k, axis=-1,
+                        context="binary GEMM operand").move_pack_axis_last()
 
 
 def classify_threshold(threshold: Optional[Threshold], n: int
@@ -255,6 +255,83 @@ def binary_binary_dense(xp: Packable, wp: Packable, k: Optional[int] = None,
     return y
 
 
+def plan_dense_launch(m: int, n: int, k: int, backend: Optional[str] = None,
+                      pack_out: bool = False,
+                      op: str = "popcount_gemm") -> dict:
+    """Static twin of the GEMM dispatch: padded launch geometry + the
+    tuning-table key for an [m, k] x [k, n] binary GEMM, without
+    touching any operand.  The graph compiler (graph/passes.py) records
+    these decisions in the plan and prefetches the key into the tuning
+    table.  Non-kernel backends plan under the "pallas" spec — the
+    deployment target the plan describes."""
+    be = get_backend(backend)
+    kb = be if be.uses_kernels else get_backend("pallas")
+    nbits = kb.pad_k(round_up(k, 32))
+    mp, np_ = kb.pad_m(m), kb.pad_n(n)
+    opk = op + "+pack" if pack_out else op
+    blocks = best_blocks(opk, mp, np_, nbits // 32, kb.name)
+    return {"op": opk, "backend": kb.name, "mp": mp, "np": np_,
+            "k32": nbits // 32, "blocks": blocks,
+            "key": (opk, kb.name, mp, np_, nbits // 32)}
+
+
+def plan_conv_launch(h: int, w: int, c: int, f: int, kh: int, kw: int,
+                     stride: int = 1, padding: Union[str, int] = "same",
+                     backend: Optional[str] = None, pack_out: bool = False,
+                     impl: str = "auto", c32: Optional[int] = None,
+                     vmem_budget: Optional[int] = None,
+                     nb: int = 1) -> dict:
+    """Static twin of the binary_conv2d dispatch decisions: output
+    geometry, the direct-vs-im2col choice via the VMEM-residency
+    estimate, and the tuning key of the launch that actually runs.
+    binary_conv2d routes its own ``impl="auto"`` decision through here,
+    so the compiled plan (graph/passes.py) can never drift from what
+    dispatch actually does.  A direct launch keys under
+    ``packed_conv[+pack]``; an im2col launch (explicit or
+    auto-resolved) re-keys under ``popcount_gemm[+pack]`` with the
+    flattened patch-matrix shape (M = nb*HO*WO rows — pass ``nb`` for
+    a batch-accurate key), exactly as binary_binary_dense will at
+    trace time."""
+    be = get_backend(backend)
+    kb = be if be.uses_kernels else get_backend("pallas")
+    pad_h, pad_w = conv_padding(padding, kh, kw)
+    ho = out_size(h, kh, stride, pad_h)
+    wo = out_size(w, kw, stride, pad_w)
+    if c32 is None:
+        c32 = (c + 31) // 32
+    fp = kb.pad_n(f)
+    d = {"ho": ho, "wo": wo, "pad_h": pad_h, "pad_w": pad_w,
+         "c32": c32, "fp": fp, "backend": kb.name, "impl": impl}
+    if impl != "im2col":
+        op = "packed_conv+pack" if pack_out else "packed_conv"
+        blocks = best_conv_blocks(op, ho, wo, fp, kh * kw * c32, kb.name)
+        # estimate with the bf the kernel will actually launch with
+        # (same clamp as packed_conv2d: up to 32 for pack_out, down to
+        # a divisor of the padded F)
+        bf_run = largest_divisor(
+            fp, min(max(blocks.bn, 32) if pack_out else blocks.bn, fp),
+            multiple_of=32 if pack_out else 1)
+        budget = (_pconv.VMEM_BUDGET_BYTES if vmem_budget is None
+                  else vmem_budget)
+        vmem = conv_vmem_bytes(h + 2 * pad_h, w + 2 * pad_w, c32, kh, kw,
+                               ho * wo, bf_run)
+        if impl == "auto":
+            # image/planes can't sit resident -> im2col
+            impl = "im2col" if vmem > budget else "direct"
+        d.update(impl=impl, op=op, blocks=blocks, vmem_bytes=vmem,
+                 vmem_budget=budget,
+                 key=(op, kb.name, ho * wo, fp, kh * kw * c32))
+    if impl == "im2col":
+        # the fallback is a plain GEMM over the word-granularity patch
+        # matrix: per-tap pad bits sit mid-row, so the contraction is
+        # 32*KH*KW*C32 bits, not round_up(KH*KW*C, 32)
+        g = plan_dense_launch(nb * ho * wo, f, 32 * kh * kw * c32,
+                              backend=kb.name, pack_out=pack_out)
+        d.update(impl="im2col", op=g["op"], blocks=g["blocks"],
+                 key=g["key"])
+    return d
+
+
 def conv_padding(padding: Union[str, int], kh: int, kw: int
                  ) -> Tuple[int, int]:
     """Symmetric per-side spatial pad: "same" (odd kernels; preserves
@@ -348,22 +425,12 @@ def binary_conv2d(xp: PackedArray, wf: PackedArray, stride: int = 1,
     fp = be.pad_n(f)
     ww = _pad_dim(ww, fp, 1)
     thr, tvec = _split_threshold(threshold, f, fp)
-    use_im2col = impl == "im2col"
-    if not use_im2col:
-        # tuning-table key only for the direct kernel — the im2col
-        # fallback re-keys under popcount_gemm via binary_binary_dense
-        op = "packed_conv+pack" if pack_out else "packed_conv"
-        blocks = best_conv_blocks(op, ho, wo, fp, kh * kw * c32, be.name)
-        # estimate with the bf the kernel will actually launch with
-        # (same clamp as packed_conv2d: up to 32 for pack_out, down to
-        # a divisor of the padded F)
-        bf_run = largest_divisor(
-            fp, min(max(blocks.bn, 32) if pack_out else blocks.bn, fp),
-            multiple_of=32 if pack_out else 1)
-        if impl == "auto" and conv_vmem_bytes(
-                xw.shape[1], xw.shape[2], c32, kh, kw, ho * wo,
-                bf_run) > _pconv.VMEM_BUDGET_BYTES:
-            use_im2col = True       # image/planes can't sit resident
+    # direct-vs-im2col + tuning key through the shared static planner
+    # (the graph compiler records the same decision in its plan)
+    d = plan_conv_launch(h, w, c, f, kh, kw, stride=stride,
+                         padding=padding, backend=be.name,
+                         pack_out=pack_out, impl=impl, c32=c32)
+    use_im2col = d["impl"] == "im2col"
 
     if use_im2col:
         patches = im2col_words(xw, kh, kw, stride, ho, wo)
@@ -381,7 +448,7 @@ def binary_conv2d(xp: PackedArray, wf: PackedArray, stride: int = 1,
 
     y = packed_conv2d(xw, ww, kh=kh, kw=kw, c=c, stride=stride,
                       ho=ho, wo=wo, threshold=thr, threshold_vec=tvec,
-                      pack_out=pack_out, valid_f=f, bf=blocks.bn,
+                      pack_out=pack_out, valid_f=f, bf=d["blocks"].bn,
                       interpret=be.interpret)
     if pack_out:
         nw = (f + 31) // 32

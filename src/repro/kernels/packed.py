@@ -28,7 +28,8 @@ delegates *here*; the reverse edge would be a cycle).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+import warnings
+from typing import Any, Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -202,6 +203,46 @@ class PackedArray:
             return self
         return PackedArray(jnp.moveaxis(self.words, self.axis, -1),
                            self.length, -1, self.values)
+
+
+# ------------------------------------------------------------------ #
+# legacy raw-words adoption                                            #
+# ------------------------------------------------------------------ #
+_RAW_WORDS_WARNED: set = set()
+
+
+def adopt_packed(a: Union["PackedArray", jax.Array],
+                 length: Optional[int] = None, axis: int = -1,
+                 context: str = "packed operand") -> "PackedArray":
+    """THE adoption point for legacy raw-uint32-word operands.
+
+    A PackedArray passes through unchanged (its recorded length is
+    cross-checked against an explicit ``length`` when one is given).  A
+    raw uint32 array is wrapped into a PackedArray over ``axis`` with
+    the given logical ``length`` (defaulting to every bit of the
+    words), after ONE DeprecationWarning per call-site ``context`` —
+    raw words carry no layout metadata, so every consumer used to
+    re-invent this adoption logic (ops dispatch, models.layers.dense,
+    models.moe); this helper is the single deprecation path for all of
+    them.
+    """
+    if isinstance(a, PackedArray):
+        if length is not None and a.length != length:
+            raise ValueError(f"{context}: explicit length={length} "
+                             f"disagrees with "
+                             f"PackedArray.length={a.length}")
+        return a
+    if context not in _RAW_WORDS_WARNED:
+        _RAW_WORDS_WARNED.add(context)
+        warnings.warn(
+            f"{context}: raw uint32 words are deprecated — wrap them in "
+            f"a PackedArray (repro.kernels.packed) so the logical "
+            f"length and pack axis travel with the words",
+            DeprecationWarning, stacklevel=3)
+    words = jnp.asarray(a)
+    if length is None:
+        length = 32 * words.shape[axis]
+    return PackedArray(words, length=length, axis=axis)
 
 
 # ------------------------------------------------------------------ #

@@ -17,15 +17,17 @@ and two serving-time weight layouts:
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.binarize import ste_sign, unpack_bits
+from repro.core.binarize import ste_sign
+from repro.graph import ir as _gir
+from repro.graph.compile import compile as graph_compile
+from repro.graph.compile import compile_dense_stack
 from repro.kernels import ops as kops
-from repro.kernels.fused_mlp import fused_binary_mlp
-from repro.kernels.packed import PackedArray
+from repro.kernels.packed import PackedArray, adopt_packed
 from repro.runtime.sharding import shard_act
 
 
@@ -90,7 +92,9 @@ def dense(p: Dict[str, jax.Array], x, mode: str = "none",
         w = wp.unpack(x.dtype) * p["alpha"]
         y = x @ w
     elif wp is not None:  # legacy raw uint32 [K/32, N] words
-        w = unpack_bits(wp, axis=0, dtype=x.dtype) * p["alpha"]
+        w = adopt_packed(wp, axis=0,
+                         context="dense legacy weights").unpack(x.dtype) \
+            * p["alpha"]
         y = x @ w
     elif mode == "none" or not binarized:
         y = x @ p["w"]
@@ -122,198 +126,68 @@ def packed_dense(p: Dict[str, jax.Array], xp: PackedArray, threshold,
                                     backend=backend)
 
 
-def infer_conv_geometry(layer) -> Tuple[int, int]:
-    """Recover (stride, pad) from a workloads.ConvLayer's in/out dims —
-    the paper's tables record only the feature-map sizes.  Searches
-    small strides/pads for an exact match (BinaryNet: s=1 same-pad;
-    AlexNet conv1: s=4 pad=0) and raises when the dims are not a
-    realizable conv geometry."""
-    for s in (1, 2, 4, 3):
-        for p in range((layer.k + 1) // 2 + 1):
-            ok_x = (layer.x1 + 2 * p - layer.k) % s == 0 and \
-                (layer.x1 + 2 * p - layer.k) // s + 1 == layer.x2
-            ok_y = (layer.y1 + 2 * p - layer.k) % s == 0 and \
-                (layer.y1 + 2 * p - layer.k) // s + 1 == layer.y2
-            if ok_x and ok_y:
-                return s, p
-    raise ValueError(f"no (stride, pad) realizes {layer.name}: "
-                     f"{layer.x1}x{layer.y1} -> {layer.x2}x{layer.y2} "
-                     f"with k={layer.k}")
-
-
-def infer_pool(x_from: int, x_to: int) -> Optional[Tuple[int, int]]:
-    """(window, stride) of the max-pool between two feature-map sizes,
-    or None when none is needed.  Covers the workloads' 2x2/s2
-    (BinaryNet) and 3x3/s2 (AlexNet) pools."""
-    if x_from == x_to:
-        return None
-    for win, s in ((3, 2), (2, 2)):    # AlexNet's 3x3/s2 preferred;
-        if (x_from - win) // s + 1 == x_to:   # BinaryNet only fits 2x2
-            return win, s
-    raise ValueError(f"no standard max-pool maps {x_from} -> {x_to}")
-
-
-def _maxpool_float(x: jax.Array, window: int, stride: int) -> jax.Array:
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
-        (1, stride, stride, 1), "VALID")
+# ------------------------------------------------------------------ #
+# DEPRECATED builder shims — the front door is repro.graph.compile     #
+# ------------------------------------------------------------------ #
+# Geometry inference moved into the compiler's lowering pass; the
+# names stay importable from here for existing callers.
+infer_conv_geometry = _gir.infer_conv_geometry
+infer_pool = _gir.infer_pool
+_fc_entry_size = _gir.fc_entry_size
 
 
 def packed_cnn_init(key, workload, threshold_range: int = 3,
                     dtype=jnp.float32) -> Dict[str, Any]:
-    """Instantiate the packed serving parameters for a workloads.py
-    Workload (BinaryNet CIFAR-10 / XNOR-AlexNet) directly from its
-    ConvLayer/FCLayer dims.
-
-    Integer (first) conv layers keep float latent weights + the
-    XNOR-Net alpha scale; binary conv layers hold a channel-packed
-    PackedArray filter [KH, KW, C, F] plus a per-channel int32
-    threshold (standing in for the folded BN of a trained net —
-    quantize_for_serving / fold_conv_to_channel_thresholds produce the
-    same form from real BN statistics).  FC layers hold [N, K]
-    PackedArrays; the last one has no threshold (it emits logits)."""
-    ks = jax.random.split(key, len(workload.conv) + len(workload.fc))
-    params: Dict[str, Any] = {"conv": [], "fc": []}
-    for i, l in enumerate(workload.conv):
-        w = jax.random.normal(ks[i], (l.k, l.k, l.z1, l.z2), dtype)
-        if l.integer:
-            alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=(0, 1, 2))
-            params["conv"].append({"w": w, "alpha": alpha})
-        else:
-            t = jax.random.randint(jax.random.fold_in(ks[i], 1),
-                                   (l.z2,), -threshold_range,
-                                   threshold_range + 1, jnp.int32)
-            params["conv"].append({"wf": PackedArray.pack(w, axis=2),
-                                   "t": t})
-    for j, l in enumerate(workload.fc):
-        kj = ks[len(workload.conv) + j]
-        w = jax.random.normal(kj, (l.n_out, l.n_in), dtype)
-        p = {"wp": PackedArray.pack(w, axis=-1)}
-        if j < len(workload.fc) - 1:
-            p["t"] = jax.random.randint(jax.random.fold_in(kj, 1),
-                                        (l.n_out,), -threshold_range,
-                                        threshold_range + 1, jnp.int32)
-        params["fc"].append(p)
-    return params
+    """DEPRECATED shim: ``graph.compile(workload).init(key, ...)``.
+    Key-split order and parameter shapes are unchanged (bit-identical
+    params; see graph/compile.py CompiledBNN.init)."""
+    return graph_compile(workload).init(
+        key, threshold_range=threshold_range, dtype=dtype)
 
 
 def packed_cnn_apply(params, x: jax.Array, workload,
                      backend: Optional[str] = None,
                      impl: str = "auto") -> jax.Array:
-    """Forward pass of a Workload topology on the packed datapath.
-
-    x: float NHWC [B, y1, x1, z1] of the first conv layer.  Integer
-    layers run the float binary-weight conv (real zero padding, MXU
-    path); the first binary layer binarize+packs its input and from
-    there activations stay channel-packed 1-bit end to end: fused
-    threshold->pack conv (ops.binary_conv2d), OR max-pooling on packed
-    words (sign is monotonic, so pool-then-binarize == binarize-then-
-    OR-pool, bit for bit), word-level flatten into the packed FC tail,
-    int32 logits out.  Returns float32 logits [B, n_classes]."""
-    from repro.core.bnn_layers import (binary_conv, binary_weight_conv,
-                                      maxpool_packed)
-
-    conv, fc = workload.conv, workload.fc
-    h: Any = x
-    packed = False
-    for i, (l, p) in enumerate(zip(conv, params["conv"])):
-        s, pad = infer_conv_geometry(l)
-        if l.integer:
-            if packed:
-                raise ValueError(f"{l.name}: integer layer after a "
-                                 f"binary layer is not representable")
-            h = binary_weight_conv(h, p["w"], stride=s, padding=pad,
-                                   alpha=p["alpha"])
-        else:
-            if not packed:
-                h = kops.binarize_pack(h, backend=backend)
-                packed = True
-            h = binary_conv(h, p["wf"], fold=p["t"], stride=s,
-                            padding=pad, pack_out=True, backend=backend,
-                            impl=impl)
-        nxt = conv[i + 1].x1 if i + 1 < len(conv) else \
-            _fc_entry_size(l, fc[0])
-        pool = infer_pool(l.x2, nxt)
-        if pool is not None:
-            h = maxpool_packed(h, *pool) if packed else \
-                _maxpool_float(h, *pool)
-
-    if not packed:                     # all-integer conv body
-        h = kops.binarize_pack(h.reshape(h.shape[0], -1), backend=backend)
-    else:
-        if h.length % 32:
-            raise ValueError(f"flattening needs C % 32 == 0 to keep the "
-                             f"word layout contiguous, got C={h.length}")
-        nb = h.words.shape[0]
-        spatial = h.words.shape[1] * h.words.shape[2]
-        h = PackedArray(h.words.reshape(nb, -1),
-                        length=spatial * h.length, axis=-1)
-    if h.length != fc[0].n_in:
-        raise ValueError(f"flattened width {h.length} != "
-                         f"{fc[0].name}.n_in={fc[0].n_in}")
-
-    for j, (l, p) in enumerate(zip(fc, params["fc"])):
-        last = j == len(fc) - 1
-        h = kops.binary_binary_dense(h, p["wp"], threshold=p.get("t"),
-                                     pack_out=not last, backend=backend)
-    return h.astype(jnp.float32)
-
-
-def _fc_entry_size(last_conv, fc0) -> int:
-    """Spatial size the last conv's maps must pool down to so that
-    z2 * s^2 == fc0.n_in (the flatten the paper's tables imply)."""
-    import math as _m
-
-    s2 = fc0.n_in // last_conv.z2
-    s = int(_m.isqrt(s2))
-    if last_conv.z2 * s * s != fc0.n_in:
-        raise ValueError(f"{fc0.name}.n_in={fc0.n_in} is not "
-                         f"z2 * s^2 for z2={last_conv.z2}")
-    return s
+    """DEPRECATED shim: ``graph.compile(workload, ...).apply(params,
+    x)``.  The compiled plan makes the same lowering decisions this
+    builder used to make inline (and fuses the FC tail into megakernel
+    segments where the VMEM budget allows) — outputs are bit-identical
+    on every backend (tests/test_graph.py)."""
+    cb = graph_compile(workload, backend=backend, batch=x.shape[0],
+                       conv_impl=impl)
+    return cb.apply(params, x)
 
 
 def packed_cnn_traffic(workload, batch: int = 1) -> Dict[str, Any]:
-    """Static HBM byte model of one forward pass: activation and weight
-    bytes moved by the packed datapath vs a bf16 NHWC baseline, per
-    layer and total (the quickstart/bench "bytes moved" numbers).
-    Integer layers move float activations on both paths; binary layers
-    move 1 bit/value packed vs 16 bits/value bf16."""
-    layers = []
-    for l in workload.conv:
-        n_in = batch * l.y1 * l.x1 * l.z1
-        n_w = l.k * l.k * l.z1 * l.z2
-        if l.integer:
-            a_p, a_b = 2 * n_in, 2 * n_in
-            w_p, w_b = n_w // 8 or n_w, 2 * n_w
-        else:
-            a_p, a_b = n_in // 8, 2 * n_in
-            w_p, w_b = n_w // 8, 2 * n_w
-        layers.append({"name": l.name, "packed_bytes": a_p + w_p,
-                       "bf16_bytes": a_b + w_b})
-    for l in workload.fc:
-        n_in, n_w = batch * l.n_in, l.n_in * l.n_out
-        layers.append({"name": l.name,
-                       "packed_bytes": n_in // 8 + n_w // 8,
-                       "bf16_bytes": 2 * n_in + 2 * n_w})
-    packed = sum(d["packed_bytes"] for d in layers)
-    bf16 = sum(d["bf16_bytes"] for d in layers)
-    return {"layers": layers, "packed_bytes": packed, "bf16_bytes": bf16,
-            "ratio_bf16_over_packed": bf16 / packed}
+    """DEPRECATED shim: ``graph.compile(workload).traffic(batch)``."""
+    return graph_compile(workload).traffic(batch=batch)
 
 
 def packed_mlp(ps, xp: PackedArray, thresholds,
                backend: Optional[str] = None) -> PackedArray:
-    """A whole fully-binary hidden stack in one megakernel launch.
+    """DEPRECATED shim over the compiled dense-stack pipeline.
 
     ps: sequence of packed layer params (each holding a ``wp``
     PackedArray in the [K, N] axis -2 layout from pack_dense_params);
-    thresholds: one int (or per-channel int32 [N_l]) per layer.  On
-    kernel backends the layers run inside a single pallas_call with the
-    packed activations resident in VMEM scratch (kernels/fused_mlp.py,
-    the TULIP-PE schedule); on "xla" it is the bit-identical chained
-    oracle."""
+    thresholds: one int (or per-channel int32 [N_l]) per layer.  The
+    compiled plan segments the stack into megakernel launches under
+    the VMEM budget (activations VMEM-resident, the TULIP-PE
+    schedule); on "xla" it is the bit-identical chained oracle."""
     ws = [p["wp"].move_pack_axis_last() for p in ps]
-    return fused_binary_mlp(xp, ws, thresholds, backend=backend)
+    rows = 1
+    for d in xp.move_pack_axis_last().words.shape[:-1]:
+        rows *= int(d)
+    # scalar-vs-vector per the one shared classification rule, so the
+    # plan's residency math matches what the kernel will see
+    per_chan = [kops.classify_threshold(t, w.words.shape[0])[1]
+                is not None for t, w in zip(thresholds, ws)]
+    cb = compile_dense_stack(ws[0].length,
+                             [w.words.shape[0] for w in ws],
+                             backend=backend, batch=rows,
+                             per_channel=per_chan)
+    params = {"fc": [{"wp": w, "t": t}
+                     for w, t in zip(ws, thresholds)]}
+    return cb.apply(params, xp)
 
 
 # ------------------------------------------------------------------ #

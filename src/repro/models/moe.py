@@ -21,8 +21,8 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.binarize import ste_sign, unpack_bits
-from repro.kernels.packed import PackedArray
+from repro.core.binarize import ste_sign
+from repro.kernels.packed import PackedArray, adopt_packed
 from repro.models.layers import act_fn, dtype_of
 from repro.runtime.sharding import shard_act
 
@@ -48,7 +48,8 @@ def _get_w(p, name, mode, dtype):
         if isinstance(wp, PackedArray):
             w = wp.unpack(dtype)              # [E, K, F], pack axis -2
         else:                                 # legacy raw uint32 words
-            w = unpack_bits(wp, axis=1, dtype=dtype)
+            w = adopt_packed(wp, axis=1,
+                             context="moe legacy weights").unpack(dtype)
         return w * p[name + "_alpha"].astype(dtype)
     return _maybe_bin(p[name], mode)
 
