@@ -10,10 +10,22 @@ For a [M,K]x[K,N] binary-weight matmul at bf16 activations:
   packed weights:      bytes = 2*MK + KN/8 + 2*MN      (16x less W traffic)
   fully binary packed: bytes = MK/8 + KN/8 + 4*MN      (popcount path)
 """
+import os
+import sys
+
+# --serve measures device-count scaling on a single host: the virtual
+# CPU-device flag must land before jax initializes its backend, hence
+# before any other import pulls jax in (per-file E402 ignore in
+# pyproject covers the imports below).
+if "--serve" in sys.argv:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=4").strip()
+
 import argparse
 import functools
 import json
-import os
 import time
 
 import jax
@@ -21,9 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.ops import (binarize_pack, binary_binary_dense,
+                              binary_dense)
 from repro.kernels.packed import PackedArray
-from repro.kernels.ops import binarize_pack, binary_dense, \
-    binary_binary_dense
 
 HBM_BW = 819e9
 PEAK = 197e12
@@ -33,6 +45,7 @@ DEFAULT_OUT = os.path.join(_HERE, "BENCH_kernels.json")
 FUSED_OUT = os.path.join(_HERE, "BENCH_fused.json")
 CONV_OUT = os.path.join(_HERE, "BENCH_conv.json")
 COMPILE_OUT = os.path.join(_HERE, "BENCH_compile.json")
+SERVE_OUT = os.path.join(_HERE, "BENCH_serve.json")
 
 
 def model_bytes(m, k, n):
@@ -430,6 +443,138 @@ def run_compile(log=print, out_json=COMPILE_OUT, smoke=False):
     return out
 
 
+def run_serve(log=print, out_json=SERVE_OUT, smoke=False):
+    """The serving engine over compile() (ISSUE 5 acceptance).
+
+    Four claims:
+      * bit-identity gate: BNNServer output on a multi-virtual-device
+        data mesh equals plain single-device CompiledBNN.apply EXACTLY
+        — float logits for BinaryNet, packed words
+        (assert_array_equal) for a dense stack; raises on divergence
+        (the CI bench-smoke step runs exactly this under
+        XLA_FLAGS=--xla_force_host_platform_device_count=4);
+      * throughput vs batch size through the bucketed dispatch path,
+        with the jit-trace count pinned to the bucket bound;
+      * device-count scaling: the same fixed batch on a 1-device vs
+        whole-host mesh (on a CPU host this measures partition
+        overhead, not speedup — the number is the regression anchor
+        for real multi-device hosts);
+      * bucket-padding overhead: ragged row counts vs exact-pow2, as
+        padded-vs-real occupancy and wall-time ratio.
+    """
+    from repro import graph
+    from repro.core.workloads import binarynet_cifar10
+    from repro.kernels.ops import binarize_pack
+    from repro.serving import BNNServer, data_mesh, trace_bound
+
+    n_dev = len(jax.devices())
+    mesh = data_mesh() if n_dev > 1 else None
+    log(f"\n== BNNServer over compile() ({n_dev} devices, mesh "
+        f"{'data=' + str(n_dev) if mesh is not None else 'none'}) ==")
+    rng = np.random.default_rng(0)
+
+    # -- bit-identity gate: sharded vs single-device ------------------ #
+    d0, hidden = (128, [128, 64]) if smoke else (512, [512, 256, 64])
+    spec = graph.from_dense_stack(d0, hidden, name="serve_mlp")
+    cb = graph.compile(spec, backend="xla", batch=8)
+    params = cb.init(jax.random.PRNGKey(0))
+    xp = binarize_pack(jnp.asarray(
+        rng.normal(size=(11, d0)).astype(np.float32)), backend="xla")
+    ref = cb.apply(params, xp)
+    srv = BNNServer(cb, params, max_batch=8, mesh=mesh)
+    got = srv.apply_batch(xp)
+    np.testing.assert_array_equal(
+        np.asarray(got.words), np.asarray(ref.words),
+        err_msg="sharded server diverges from single-device apply")
+
+    wl = binarynet_cifar10()
+    cbn = graph.compile(wl, backend="xla", batch=4)
+    bp = cbn.init(jax.random.PRNGKey(1))
+    img = jax.random.normal(jax.random.PRNGKey(2), (3, 32, 32, 3),
+                            jnp.float32)
+    ref_logits = cbn.apply(bp, img)
+    bsrv = BNNServer(cbn, bp, max_batch=4, mesh=mesh)
+    got_logits = bsrv.apply_batch(img)
+    np.testing.assert_array_equal(
+        np.asarray(got_logits), np.asarray(ref_logits),
+        err_msg="sharded BinaryNet logits diverge from single-device")
+    log(f"bit-identity gate OK (packed words + BinaryNet logits, "
+        f"{n_dev} virtual devices vs 1)")
+
+    # -- throughput vs batch size ------------------------------------- #
+    batches = [1, 4, 8] if smoke else [1, 4, 16, 64]
+    tsrv = BNNServer(cb, params, max_batch=max(batches), mesh=mesh)
+    thr_rows = []
+    for b in batches:
+        xb = binarize_pack(jnp.asarray(
+            rng.normal(size=(b, d0)).astype(np.float32)), backend="xla")
+        t = _wall(tsrv.apply_batch, xb)
+        thr_rows.append({"batch": b, "wall_s": t, "rows_per_s": b / t})
+        log(f"batch {b:>3d}: {t * 1e3:7.2f}ms  {b / t:9.1f} rows/s")
+    assert tsrv.jit_traces() <= trace_bound(tsrv.max_batch), \
+        "bucketed dispatch exceeded its trace bound"
+
+    # -- device-count scaling on the same fixed batch ----------------- #
+    bfix = batches[-1]
+    xf = binarize_pack(jnp.asarray(
+        rng.normal(size=(bfix, d0)).astype(np.float32)), backend="xla")
+    s1 = BNNServer(cb, params, max_batch=bfix, mesh=None)
+    t1 = _wall(s1.apply_batch, xf)
+    scaling = {"batch": bfix, "devices_1_wall_s": t1}
+    if mesh is not None:
+        sn = BNNServer(cb, params, max_batch=bfix, mesh=mesh)
+        tn = _wall(sn.apply_batch, xf)
+        scaling.update({"devices_n": n_dev, "devices_n_wall_s": tn,
+                        "speedup": t1 / tn})
+        log(f"device scaling @batch={bfix}: 1 dev {t1 * 1e3:.2f}ms vs "
+            f"{n_dev} dev {tn * 1e3:.2f}ms ({t1 / tn:.2f}x)")
+
+    # -- bucket-padding overhead -------------------------------------- #
+    exact_wall = {r["batch"]: r["wall_s"] for r in thr_rows}
+
+    def exact_bucket_wall(bucket):
+        if bucket not in exact_wall:
+            xe = binarize_pack(jnp.asarray(
+                rng.normal(size=(bucket, d0)).astype(np.float32)),
+                backend="xla")
+            pe = BNNServer(cb, params, max_batch=tsrv.max_batch,
+                           mesh=mesh)
+            exact_wall[bucket] = _wall(pe.apply_batch, xe)
+        return exact_wall[bucket]
+
+    ragged = []
+    for rows in ([3, 5] if smoke else [3, 5, 9, 33]):
+        if rows > tsrv.max_batch:
+            continue
+        xr = binarize_pack(jnp.asarray(
+            rng.normal(size=(rows, d0)).astype(np.float32)),
+            backend="xla")
+        pr = BNNServer(cb, params, max_batch=tsrv.max_batch, mesh=mesh)
+        t_r = _wall(pr.apply_batch, xr)
+        bucket = pr.stats()["buckets_traced"][-1]
+        t_exact = exact_bucket_wall(bucket)
+        ragged.append({
+            "rows": rows, "bucket": bucket, "wall_s": t_r,
+            "occupancy": rows / bucket,
+            "overhead_vs_exact": t_r / t_exact})
+        log(f"rows {rows:>3d} -> bucket {bucket:>3d}: occupancy "
+            f"{rows / bucket:.2f}, wall {t_r * 1e3:7.2f}ms "
+            f"({t_r / t_exact:.2f}x the exact-bucket batch)")
+
+    stats = tsrv.stats()
+    out = {"host_backend": jax.default_backend(), "devices": n_dev,
+           "smoke": smoke, "throughput": thr_rows, "scaling": scaling,
+           "padding": ragged,
+           "server_stats": {k: v for k, v in stats.items()
+                            if not isinstance(v, dict)},
+           "bit_identity": "sharded == single-device (words + logits)"}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        log(f"wrote {out_json}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
@@ -447,19 +592,32 @@ if __name__ == "__main__":
                     help="benchmark the graph compile(spec) pipeline "
                          "(fails on fused-vs-chained or cross-backend "
                          "divergence, or a Table III mismatch)")
+    ap.add_argument("--serve", action="store_true",
+                    help="benchmark BNNServer bucketed+sharded serving "
+                         "on a 4-virtual-device CPU mesh (fails on "
+                         "sharded-vs-single-device divergence)")
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes for CI (with "
-                         "--fused/--conv/--compile)")
+                         "--fused/--conv/--compile/--serve)")
     args = ap.parse_args()
+
+    def dest_for(default):
+        """Default output path; --smoke writes BENCH_*_smoke.json so a
+        smoke run (CI or local) never clobbers the tracked full-run
+        artifacts."""
+        if args.out is not None:
+            return args.out or None
+        if args.smoke:
+            return default.replace(".json", "_smoke.json")
+        return default
+
     if args.fused:
-        dest = FUSED_OUT if args.out is None else (args.out or None)
-        run_fused(out_json=dest, smoke=args.smoke)
+        run_fused(out_json=dest_for(FUSED_OUT), smoke=args.smoke)
     elif args.conv:
-        dest = CONV_OUT if args.out is None else (args.out or None)
-        run_conv(out_json=dest, smoke=args.smoke)
+        run_conv(out_json=dest_for(CONV_OUT), smoke=args.smoke)
     elif args.compile:
-        dest = COMPILE_OUT if args.out is None else (args.out or None)
-        run_compile(out_json=dest, smoke=args.smoke)
+        run_compile(out_json=dest_for(COMPILE_OUT), smoke=args.smoke)
+    elif args.serve:
+        run_serve(out_json=dest_for(SERVE_OUT), smoke=args.smoke)
     else:
-        dest = DEFAULT_OUT if args.out is None else (args.out or None)
-        run(out_json=dest)
+        run(out_json=dest_for(DEFAULT_OUT))

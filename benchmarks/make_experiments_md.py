@@ -83,11 +83,14 @@ def perf_variants() -> str:
 def main():
     cells = R.load_cells()
     buf = io.StringIO()
-    log = lambda *a: print(*a, file=buf)
-    t1 = table1.run(log)
-    t2 = table2.run(log)
-    t3 = table3.run(log)
-    t45 = table4_5.run(log)
+
+    def log(*a):
+        print(*a, file=buf)
+
+    table1.run(log)
+    table2.run(log)
+    table3.run(log)
+    table4_5.run(log)
     tables_txt = buf.getvalue()
 
     md = open("EXPERIMENTS.md.in").read() if os.path.exists(

@@ -6,7 +6,7 @@ paper reports 441; the naive sequential schedule, the compacting list
 scheduler, and the bit-parallel leaf variant bracket it.
 """
 from repro.core.adder_tree import schedule_tree, storage_bound
-from repro.core.energy import CellSpecs, pe_cycles, mac_cycles
+from repro.core.energy import CellSpecs, mac_cycles, pe_cycles
 
 
 def run(log=print):

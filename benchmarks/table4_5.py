@@ -7,8 +7,8 @@ out-of-sample.  Reported twice: with the paper's raw Table II PE power
 (pe_act=1.0) and with the single fitted PE activity factor that
 reconciles the paper's own tables (see SystemParams.pe_act).
 """
-from repro.core.energy import (CellSpecs, PAPER_TABLE4, PAPER_TABLE5, TULIP,
-                               YODANN, calibrate, calibrate_tulip,
+from repro.core.energy import (PAPER_TABLE4, PAPER_TABLE5, TULIP, YODANN,
+                               CellSpecs, calibrate, calibrate_tulip,
                                chip_area_um2, evaluate)
 from repro.core.workloads import WORKLOADS
 

@@ -13,7 +13,12 @@
    Workload dataclass — forward pass, lowering plan, HBM bytes moved
    vs the bf16 equivalent, and the TULIP-PE mapping from the SAME
    compiled spec.
-5. A whole (reduced) assigned LM architecture with binarized weights.
+5. The serving front door: the compiled BinaryNet behind a BNNServer —
+   pow2 batch bucketing (one jit trace per bucket, never per request),
+   a micro-batch request queue with futures, and the stats() surface
+   (bucket hit rate, padding occupancy, HBM bytes/request).  On a
+   multi-device host the same server shards the batch axis over the
+   mesh "data" axis, bit-identically.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -25,9 +30,7 @@ from repro.core.adder_tree import make_ext_inputs, schedule_tree
 from repro.core.binarize import PackedArray, xnor_popcount_dot
 from repro.core.bnn_layers import apply_folded, quantize_for_serving
 from repro.core.tulip_pe import run_numpy
-from repro.configs import get_arch, reduced
 from repro.kernels.ops import binarize_pack
-from repro.models import init_params, loss_fn
 
 # --- 1. the ASIC: a 96-input binary neuron on one TULIP-PE ----------
 n, T = 96, 40
@@ -132,16 +135,30 @@ print("[compile] lowering plan:")
 for s in cbn.plan:
     print(f"    {s}")
 
-# --- 5. a whole (reduced) assigned architecture, binarized ----------
-cfg = reduced(get_arch("mixtral-8x22b")).replace(dtype="float32")
-params = init_params(jax.random.PRNGKey(0), cfg)
-batch = {
-    "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
-                                 cfg.vocab_size),
-    "targets": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
-                                  cfg.vocab_size),
-}
-loss = loss_fn(params, cfg, batch)
-print(f"[model] reduced mixtral-8x22b (binarized weights) loss "
-      f"{float(loss):.3f} ✓")
+# --- 5. the serving front door: BNNServer over the compiled net -----
+from repro.serving import BNNServer, data_mesh
+
+# the SAME CompiledBNN + params from §4 go behind the server: requests
+# enter a queue, coalesce into micro-batches, pad to pow2 buckets (one
+# jit trace per bucket — bounded, asserted in tests/test_serving.py),
+# and on a multi-device host shard their batch axis over the mesh
+mesh = data_mesh() if len(jax.devices()) > 1 else None
+server = BNNServer(cbn, cnn, max_batch=4, mesh=mesh)
+server.start()                       # background dispatch thread
+futs = [server.submit(jax.random.normal(jax.random.PRNGKey(10 + i),
+                                        (rows, 32, 32, 3), jnp.float32))
+        for i, rows in enumerate((1, 3, 2, 4))]
+outs = [f.result(timeout=300) for f in futs]
+server.stop()
+direct = cbn.apply(cnn, jax.random.normal(jax.random.PRNGKey(10),
+                                          (1, 32, 32, 3), jnp.float32))
+assert (np.asarray(outs[0]) == np.asarray(direct)).all()
+st = server.stats()
+print(f"[serve] BNNServer over the compiled BinaryNet: "
+      f"{st['requests']} requests / {st['rows']} rows on "
+      f"{st['devices']} device(s), {st['jit_traces']} jit traces "
+      f"(bound {st['trace_bound']}), bucket hit rate "
+      f"{st['bucket_hit_rate']:.2f}, occupancy {st['occupancy']:.2f}, "
+      f"{st['hbm_bytes_per_request'] / 1e6:.2f}MB HBM/request, "
+      f"== direct apply ✓")
 print("quickstart OK")

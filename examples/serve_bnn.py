@@ -16,17 +16,19 @@ def main():
     cfg = reduced(get_arch("qwen1.5-0.5b")).replace(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    mk = lambda: [Request(i, rng.integers(0, cfg.vocab_size, 10).astype(
-        np.int32), 6) for i in range(4)]
+
+    def mk():
+        return [Request(i, rng.integers(0, cfg.vocab_size, 10).astype(
+            np.int32), 6) for i in range(4)]
 
     print("dense bf16 weight layout (baseline):")
     eng = Engine(cfg, params, batch_slots=2, capacity=32, packed=False)
-    dense_reqs = eng.run(mk())
+    eng.run(mk())
 
     print("TULIP bit-packed weight layout:")
     rng = np.random.default_rng(0)
     eng_p = Engine(cfg, params, batch_slots=2, capacity=32, packed=True)
-    packed_reqs = eng_p.run(mk())
+    eng_p.run(mk())
 
     n_weights = cfg.param_count()
     print(f"\nweights: {n_weights / 1e6:.1f}M params; packed layout moves "

@@ -10,6 +10,8 @@ chip model over BinaryNet/AlexNet.
 
 Run:  PYTHONPATH=src python examples/tulip_asic_sim.py
 """
+import sys
+
 import numpy as np
 
 from repro import graph
@@ -19,7 +21,6 @@ from repro.core.threshold import bnn_node_reference
 from repro.core.tulip_pe import run_numpy
 from repro.core.workloads import alexnet_imagenet, binarynet_cifar10
 
-import sys
 sys.path.insert(0, ".")
 from benchmarks import table2, table3, table4_5  # noqa: E402
 

@@ -1,7 +1,7 @@
-from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, TRAIN_4K,
-                                PREFILL_32K, DECODE_32K, LONG_500K, reduced,
+from repro.configs.base import (DECODE_32K, LONG_500K, PREFILL_32K, SHAPES,
+                                TRAIN_4K, ModelConfig, ShapeConfig, reduced,
                                 shape_applicable)
-from repro.configs.registry import ARCHS, get_arch, get_shape, all_cells
+from repro.configs.registry import ARCHS, all_cells, get_arch, get_shape
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "TRAIN_4K", "PREFILL_32K",
            "DECODE_32K", "LONG_500K", "reduced", "shape_applicable",

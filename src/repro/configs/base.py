@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 def _round_up(x: int, m: int) -> int:
@@ -171,7 +171,7 @@ class ModelConfig:
             n += self.num_layers * per_layer
         elif self.family == "hybrid":
             w = self.lru_width or d
-            rec = (d * 2 * w + w * self.conv1d_width + 2 * w  # gates a,x per-ch? (RG-LRU)
+            rec = (d * 2 * w + w * self.conv1d_width + 2 * w  # RG-LRU a,x gates
                    + 2 * w * w                      # input/ gate projections
                    + w * d + norms)
             loc = dense_layer()

@@ -1,19 +1,18 @@
 """Architecture registry: maps the exact assignment ids to configs."""
 from __future__ import annotations
 
-from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, reduced,
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, reduced,
                                 shape_applicable)
-
-from repro.configs.phi35_moe_42b import CONFIG as _PHI
-from repro.configs.mixtral_8x22b import CONFIG as _MIX
-from repro.configs.command_r_plus_104b import CONFIG as _CRP
 from repro.configs.command_r_35b import CONFIG as _CR
+from repro.configs.command_r_plus_104b import CONFIG as _CRP
+from repro.configs.falcon_mamba_7b import CONFIG as _FM
 from repro.configs.internlm2_20b import CONFIG as _ILM
+from repro.configs.llama32_vision_11b import CONFIG as _LV
+from repro.configs.mixtral_8x22b import CONFIG as _MIX
+from repro.configs.phi35_moe_42b import CONFIG as _PHI
 from repro.configs.qwen15_05b import CONFIG as _QW
 from repro.configs.recurrentgemma_2b import CONFIG as _RG
 from repro.configs.whisper_large_v3 import CONFIG as _WH
-from repro.configs.llama32_vision_11b import CONFIG as _LV
-from repro.configs.falcon_mamba_7b import CONFIG as _FM
 
 ARCHS: dict[str, ModelConfig] = {
     c.name: c

@@ -12,7 +12,6 @@ and tests verify bit-for-bit.
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple, Optional, Tuple, Union
 
 import jax

@@ -30,7 +30,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.adder_tree import schedule_tree
-from repro.core.mapping import (ArchParams, TULIP, YODANN, map_conv, map_fc)
+from repro.core.mapping import (TULIP, YODANN, ArchParams, map_conv,
+                                map_fc)
 from repro.core.workloads import Workload
 
 
@@ -226,17 +227,18 @@ class WorkloadReport:
 
     def _sel(self, conv_only: bool):
         if conv_only:
-            return [l for l in self.layers if l.name.startswith("conv")]
+            return [ly for ly in self.layers
+                    if ly.name.startswith("conv")]
         return self.layers
 
     def ops(self, conv_only=False):
-        return sum(l.ops for l in self._sel(conv_only))
+        return sum(ly.ops for ly in self._sel(conv_only))
 
     def time_s(self, conv_only=False):
-        return sum(l.time_s for l in self._sel(conv_only))
+        return sum(ly.time_s for ly in self._sel(conv_only))
 
     def energy_j(self, conv_only=False):
-        return sum(l.energy_j for l in self._sel(conv_only))
+        return sum(ly.energy_j for ly in self._sel(conv_only))
 
     def perf_gops(self, conv_only=False):
         return self.ops(conv_only) / self.time_s(conv_only) / 1e9
@@ -247,8 +249,10 @@ class WorkloadReport:
 
 def evaluate(workload: Workload, arch: ArchParams, spec: CellSpecs,
              sys: SystemParams) -> WorkloadReport:
-    layers = [_conv_layer_report(l, arch, spec, sys) for l in workload.conv]
-    layers += [_fc_layer_report(l, arch, spec, sys) for l in workload.fc]
+    layers = [_conv_layer_report(ly, arch, spec, sys)
+              for ly in workload.conv]
+    layers += [_fc_layer_report(ly, arch, spec, sys)
+               for ly in workload.fc]
     return WorkloadReport(workload.name, arch.name, layers)
 
 

@@ -103,7 +103,8 @@ class NeuronOp:
 class Cycle:
     bus_b: Src = Z
     bus_c: Src = Z
-    neurons: List[NeuronOp] = field(default_factory=lambda: [NeuronOp() for _ in range(N_NEURONS)])
+    neurons: List[NeuronOp] = field(
+        default_factory=lambda: [NeuronOp() for _ in range(N_NEURONS)])
     label: str = ""
 
 
@@ -118,7 +119,10 @@ class Program:
     # ---- packed representation for the vectorized simulators ------------
     def pack(self) -> dict:
         T = len(self.cycles)
-        arr = lambda *s: np.zeros(s, dtype=np.int32)
+
+        def arr(*s):
+            return np.zeros(s, dtype=np.int32)
+
         out = {
             "bus_src": arr(T, 2), "bus_fresh": arr(T, 2), "bus_inv": arr(T, 2),
             "sel": arr(T, N_NEURONS, 2),       # ports a, d

@@ -19,8 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.core.isa import (EXT, HOLD, N, NeuronOp, Program, REG, Src, Z,
-                            Cycle, N_NEURONS)
+from repro.core.isa import (EXT, HOLD, N, N_NEURONS, REG, Z, Cycle,
+                            NeuronOp, Program, Src)
 
 
 @dataclass

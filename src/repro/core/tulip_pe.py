@@ -25,7 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.isa import (EXT_BASE, NEURON_BASE, N_NEURONS, N_REG_BITS,
+from repro.core.isa import (EXT_BASE, N_NEURONS, N_REG_BITS, NEURON_BASE,
                             REG_BASE, Program)
 
 MAX_STAGES = 4

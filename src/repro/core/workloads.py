@@ -15,7 +15,7 @@ apples-to-apples.  benchmarks/table3.py checks the P/Z columns exactly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -64,11 +64,11 @@ class Workload:
 
     @property
     def conv_ops(self) -> int:
-        return sum(l.ops for l in self.conv)
+        return sum(ly.ops for ly in self.conv)
 
     @property
     def total_ops(self) -> int:
-        return self.conv_ops + sum(l.ops for l in self.fc)
+        return self.conv_ops + sum(ly.ops for ly in self.fc)
 
 
 def binarynet_cifar10() -> Workload:

@@ -43,7 +43,7 @@ from repro.core.workloads import Workload
 from repro.graph.ir import (BinaryConv, BinaryDense, BNNSpec,
                             IntegerEntry, MaxPool, from_dense_stack,
                             from_workload, spec_to_workload)
-from repro.graph.passes import PlanStep, build_plan
+from repro.graph.passes import PlanStep, build_plan, plan_tuning_keys
 from repro.kernels import ops as kops
 from repro.kernels.fused_mlp import fused_binary_mlp
 from repro.kernels.packed import PackedArray
@@ -110,6 +110,19 @@ class CompiledBNN:
         return sum(len(s.args["fc_indices"]) if s.kind == "fused_stack"
                    else s.kind in ("binarize", "binary_conv", "dense")
                    for s in self.plan)
+
+    def tuning_keys_for_batch(self, batch: int) -> Tuple[tuple, ...]:
+        """The autotune keys this plan's launches resolve to at a
+        different batch size — the SAME plan (segment boundaries, conv
+        impls), only the row terms rescaled.  The serving engine
+        (repro.serving.BNNServer) calls this once per batch bucket and
+        feeds the result to ``kernels.autotune.warm`` instead of
+        recompiling per bucket."""
+        if batch == self.batch:
+            return self.tuning_keys
+        return plan_tuning_keys(self.spec, self.plan, batch,
+                                backend=self.backend,
+                                vmem_budget=self.vmem_budget)
 
     # -------------------------------------------------------------- #
     def init(self, key, threshold_range: int = 3,

@@ -36,7 +36,7 @@ from repro.graph.ir import (Binarize, BinaryConv, BinaryDense, BNNSpec,
 from repro.kernels.fused_mlp import stack_plan
 from repro.kernels.ops import plan_conv_launch, plan_dense_launch
 
-__all__ = ["PlanStep", "build_plan"]
+__all__ = ["PlanStep", "build_plan", "plan_tuning_keys"]
 
 
 @dataclass(frozen=True)
@@ -117,6 +117,61 @@ def _segment_dense_run(run, k0: int, batch: int,
             k0 = run[j - 1][1].n_out
             i = j
     return steps
+
+
+def _dense_thresholds(spec: BNNSpec):
+    """fc-index-ordered (BinaryDense node, following BNThreshold or
+    None) pairs — the same pairing build_plan walks."""
+    out = []
+    nodes = spec.nodes
+    for i, nd in enumerate(nodes):
+        if isinstance(nd, BinaryDense):
+            thr = nodes[i + 1] if i + 1 < len(nodes) and \
+                isinstance(nodes[i + 1], BNThreshold) else None
+            out.append((nd, thr))
+    return out
+
+
+def plan_tuning_keys(spec: BNNSpec, plan: Tuple[PlanStep, ...],
+                     batch: int, backend: Optional[str] = None,
+                     vmem_budget: Optional[int] = None
+                     ) -> Tuple[tuple, ...]:
+    """The autotune keys an existing plan's launches resolve to at a
+    *different* batch size — same plan structure (segment boundaries,
+    conv impls), only the M/row terms rescaled through the same
+    plan_* twins dispatch consults.  This is how the serving engine
+    (repro.serving) warms the tuning table per batch bucket while
+    reusing ONE compiled plan: recompiling per bucket would re-run
+    segmentation, whose decisions may shift with m — the bits never
+    change (stack_plan/ops re-check residency at trace time), but the
+    plan the server reports would silently disagree with the one it
+    serves."""
+    dn = _dense_thresholds(spec)
+    conv_nodes = spec.conv_nodes
+    keys = []
+    for s in plan:
+        if s.kind == "binary_conv":
+            nd = conv_nodes[s.args["conv_idx"]]
+            d = plan_conv_launch(
+                nd.h_in, nd.w_in, nd.c_in, nd.c_out, nd.kh, nd.kw,
+                stride=s.args["stride"], padding=s.args["pad"],
+                backend=backend, pack_out=True, impl=s.args["impl"],
+                vmem_budget=vmem_budget, nb=batch)
+            keys.append(d["key"])
+        elif s.kind == "dense":
+            nd, _ = dn[s.args["fc_idx"]]
+            d = plan_dense_launch(batch, nd.n_out, nd.n_in,
+                                  backend=backend,
+                                  pack_out=s.args["pack_out"])
+            keys.append(d["key"])
+        elif s.kind == "fused_stack":
+            nds = [dn[j] for j in s.args["fc_indices"]]
+            sp = stack_plan(batch, nds[0][0].n_in,
+                            [nd.n_out for nd, _ in nds],
+                            [t.per_channel for _, t in nds],
+                            backend=backend, budget=vmem_budget)
+            keys.append(sp["key"])
+    return tuple(keys)
 
 
 def build_plan(spec: BNNSpec, backend: Optional[str] = None,

@@ -152,6 +152,16 @@ def best_blocks(op: str, m: int, n: int, k32: int,
     return _TABLE.put(key, _heuristic(m, n, k32, n_mult=n_mult))
 
 
+def warm(keys: Iterable[Key]) -> None:
+    """Resolve every key through ``best_blocks`` so later dispatches at
+    these shapes are guaranteed table hits.  The batch dimension is
+    part of every key's M term — the serving engine calls this once per
+    batch *bucket* (keys from ``CompiledBNN.tuning_keys_for_batch``),
+    which is the one place a new M enters the table outside dispatch."""
+    for op, backend, m, n, k32 in keys:
+        best_blocks(op, m, n, k32, backend)
+
+
 def best_conv_blocks(op: str, ho: int, wo: int, f: int, k32: int,
                      backend: str = "pallas") -> BlockConfig:
     """Conv launches share the GEMM tuning table under the im2col-

@@ -30,13 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import packed_conv as _pconv
 from repro.kernels import ref
-from repro.kernels.autotune import best_conv_blocks, best_blocks
+from repro.kernels.autotune import best_blocks, best_conv_blocks
+from repro.kernels.csa import largest_divisor
 from repro.kernels.pack import pack as _pack_kernel
 from repro.kernels.packed import (PackedArray, adopt_packed,
                                   default_backend, get_backend, round_up)
-from repro.kernels import packed_conv as _pconv
-from repro.kernels.csa import largest_divisor
 from repro.kernels.packed_conv import (conv_vmem_bytes, im2col_words,
                                        out_size, packed_conv2d,
                                        pad_words_spatial)

@@ -41,6 +41,7 @@ from repro.configs import get_arch, reduced
 from repro.kernels.packed import tree_nbytes
 from repro.models import model as M
 from repro.models.quantize import pack_model_params
+from repro.serving.bucketing import pow2_ceil
 
 
 @dataclass
@@ -79,12 +80,14 @@ class Engine:
             and not cfg.is_encdec
 
     def _prefill_len(self, n: int) -> int:
-        """Bucket a prompt length: next power of two, clamped to the
-        cache capacity (padding past capacity would evict real tokens
-        from the ring); exact length for recurrent stacks."""
+        """Bucket a prompt length: next power of two (the ONE pow2
+        rule, shared with the serving engine's batch bucketing in
+        repro.serving.bucketing), clamped to the cache capacity
+        (padding past capacity would evict real tokens from the ring);
+        exact length for recurrent stacks."""
         if not self._bucketed or n >= self.capacity:
             return n
-        return min(1 << (n - 1).bit_length(), self.capacity)
+        return min(pow2_ceil(n), self.capacity)
 
     def _get_prefill(self, padded_len: int):
         """The jitted prefill for one bucketed prompt length — traced
@@ -135,7 +138,10 @@ class Engine:
 
     def run(self, requests: List[Request], log=print) -> List[Request]:
         pending = list(requests)
-        active = lambda: any(r is not None for r in self.slot_req)
+
+        def active():
+            return any(r is not None for r in self.slot_req)
+
         t0 = time.time()
         n_steps = 0
         while pending or active():

@@ -18,10 +18,8 @@ CPU-runnable:  PYTHONPATH=src python -m repro.launch.train \
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax

@@ -126,7 +126,7 @@ def chunked_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
         # nothing quadratic survives to the bwd pass)
 
         def kv_body(carry, kj_vj_kpos):
-            m, l, acc = carry
+            m, lse, acc = carry
             kj, vj, kpos = kj_vj_kpos
             s = jnp.einsum("bqhgd,bkhd->bqhgk", qi, kj,
                            preferred_element_type=jnp.float32) * scale
@@ -140,19 +140,19 @@ def chunked_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + p.sum(axis=-1)
+            lse = lse * corr + p.sum(axis=-1)
             acc = acc * corr[..., None] + jnp.einsum(
                 "bqhgk,bkhd->bqhgd", p.astype(vj.dtype), vj,
                 preferred_element_type=jnp.float32)
-            return (m_new, l, acc), None
+            return (m_new, lse, acc), None
 
         init = (jnp.full((B, qc, Hkv, G), -jnp.inf, jnp.float32),
                 jnp.zeros((B, qc, Hkv, G), jnp.float32),
                 jnp.zeros((B, qc, Hkv, G, D), jnp.float32))
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lse, acc), _ = jax.lax.scan(
             kv_body, init,
             (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), kp))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(lse, 1e-30)[..., None]
         return out.astype(q.dtype)
 
     def q_body(_, qi_qpos):

@@ -14,9 +14,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import transformer as tfm
-from repro.models.layers import (chunked_xent, dtype_of, embed_init,
-                                 embed_lookup, logits_apply, norm_init,
-                                 apply_norm)
+from repro.models.layers import (apply_norm, chunked_xent, dtype_of,
+                                 embed_init, embed_lookup, logits_apply,
+                                 norm_init)
 from repro.runtime.sharding import shard_act
 
 
@@ -131,7 +131,6 @@ def decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
     """One token step.  batch: {"tokens": [B,1], "step": [B],
     "caches": pytree}.  Returns (logits [B,1,V], new caches)."""
     tokens, step, caches = batch["tokens"], batch["step"], batch["caches"]
-    B = tokens.shape[0]
     x = embed_lookup(params["embed"], tokens).astype(dtype_of(cfg))
     if cfg.learned_pos:
         x = x + jnp.take(params["pos_emb"], step, axis=0)[:, None]

@@ -82,8 +82,8 @@ def rglru_apply(p, x, cfg, state: Optional[Dict] = None):
         hs = h[:, None, :]
         h_last = h
     else:
-        def comb(l, r_):
-            return (l[0] * r_[0], r_[0] * l[1] + r_[1])
+        def comb(lt, rt):
+            return (lt[0] * rt[0], rt[0] * lt[1] + rt[1])
         aa, bb = jax.lax.associative_scan(comb, (a, gated), axis=1)
         h0 = state["h"][:, None] if state is not None \
             else jnp.zeros((B, 1, w), jnp.float32)

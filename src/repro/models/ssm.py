@@ -72,8 +72,8 @@ def _scan_chunked(a, bx, h0, chunk: int):
 
     def body(h, ab):
         ai, bi = ab                               # [B,c,C,N]
-        def comb(l, r):
-            return (l[0] * r[0], r[0] * l[1] + r[1])
+        def comb(lt, rt):
+            return (lt[0] * rt[0], rt[0] * lt[1] + rt[1])
         aa, bb = jax.lax.associative_scan(comb, (ai, bi), axis=1)
         h_seq = aa * h[:, None] + bb              # [B,c,C,N]
         return h_seq[:, -1], h_seq

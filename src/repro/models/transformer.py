@@ -27,8 +27,8 @@ from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (apply_norm, mlp_apply, mlp_init, norm_init,
-                                 dtype_of)
+from repro.models.layers import (apply_norm, dtype_of, mlp_apply, mlp_init,
+                                 norm_init)
 from repro.runtime.sharding import shard_act
 
 

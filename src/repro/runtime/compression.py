@@ -12,7 +12,6 @@ axis exists, and degrades to identity otherwise.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Optional, Tuple
 
 import jax

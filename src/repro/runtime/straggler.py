@@ -9,7 +9,6 @@ the policy layer a 1000-node deployment tunes before enabling.
 """
 from __future__ import annotations
 
-import math
 import time
 from collections import deque
 from dataclasses import dataclass, field

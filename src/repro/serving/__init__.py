@@ -1,0 +1,30 @@
+"""The serving subsystem: BNNServer over compile() (DESIGN.md §9).
+
+``graph.compile`` turns a spec into an executable; this package turns
+that executable into a *service* — pow2 batch bucketing with a bounded
+jit-trace set, data-parallel mesh sharding that stays bit-identical to
+single-device execution, and a micro-batch request queue with latency
+accounting and a ``stats()`` surface.
+"""
+
+from repro.serving.bucketing import (
+    bucket_for,
+    bucket_sizes,
+    pow2_ceil,
+    split_rows,
+    trace_bound,
+)
+from repro.serving.placement import data_mesh, replicate, shard_batch
+from repro.serving.server import BNNServer
+
+__all__ = [
+    "BNNServer",
+    "bucket_for",
+    "bucket_sizes",
+    "data_mesh",
+    "pow2_ceil",
+    "replicate",
+    "shard_batch",
+    "split_rows",
+    "trace_bound",
+]

@@ -1,0 +1,65 @@
+"""Pow2 batch bucketing policy for the serving engine (DESIGN.md §9).
+
+The server jits ``CompiledBNN.apply`` once per *bucket*, not once per
+request batch size: a request batch of ``n`` rows is right-padded to
+the smallest power of two >= ``n`` (clamped to ``max_batch``), so the
+number of distinct jit traces is bounded by ``trace_bound(max_batch)``
+— the prompt-length bucketing already proven out in launch/serve.py,
+applied to the batch axis.  Pad rows are zeros (all-(-1) under the pm1
+packing convention); every row's result is independent of the others,
+so padding can only waste compute, never change bits, and the pad rows
+are sliced off before results leave the server.
+
+Request batches larger than ``max_batch`` are split into ``max_batch``
+chunks plus a bucketed remainder (``split_rows``) — arbitrarily large
+requests ride the same bounded trace set.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+__all__ = ["bucket_for", "bucket_sizes", "pow2_ceil", "split_rows", "trace_bound"]
+
+
+def pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"need a positive row count, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_sizes(max_batch: int) -> Tuple[int, ...]:
+    """Every bucket the server can dispatch: 1, 2, 4, ... ``max_batch``
+    (``max_batch`` itself must be a power of two)."""
+    if max_batch < 1 or max_batch & (max_batch - 1):
+        raise ValueError(f"max_batch must be a power of two, got {max_batch}")
+    return tuple(1 << i for i in range(max_batch.bit_length()))
+
+
+def bucket_for(n: int, max_batch: int) -> int:
+    """The bucket an ``n``-row micro-batch dispatches under: the pow2
+    ceiling of ``n``, clamped to ``max_batch``.  ``n`` must already be
+    <= ``max_batch`` (``split_rows`` chunks oversized requests)."""
+    if n > max_batch:
+        msg = f"{n} rows exceed max_batch={max_batch}; split first (split_rows)"
+        raise ValueError(msg)
+    return min(pow2_ceil(n), max_batch)
+
+
+def split_rows(n: int, max_batch: int) -> List[int]:
+    """Chunk an ``n``-row request into dispatchable pieces: full
+    ``max_batch`` chunks plus the remainder (which then buckets to its
+    own pow2)."""
+    if n < 1:
+        raise ValueError(f"need a positive row count, got {n}")
+    chunks = [max_batch] * (n // max_batch)
+    if n % max_batch:
+        chunks.append(n % max_batch)
+    return chunks
+
+
+def trace_bound(max_batch: int) -> int:
+    """Hard upper bound on jit traces the bucketing policy admits per
+    (input kind, mesh): one per bucket, i.e. log2(max_batch) + 1."""
+    return len(bucket_sizes(max_batch))

@@ -1,0 +1,66 @@
+"""Mesh placement for the serving engine (DESIGN.md §9).
+
+Data-parallel serving: the request batch axis is sharded over the mesh
+"data" axis, parameters are replicated.  The rules come from
+runtime/sharding.py — ``fit_spec`` with the shared ``BATCH_AXES``
+degrades to replication whenever the bucket does not divide the mesh
+(a 1- or 2-row bucket on a 4-device mesh), so every bucket runs on
+every mesh and the result is bit-identical to single-device execution
+either way.
+
+``PackedArray`` inputs shard on their ``words`` leaf: the pack axis is
+the (trailing) feature axis, so row-sharding the leading word dim
+partitions whole packed rows — no word ever straddles two devices, and
+the packed output words come back bit-identical (tests/test_serving.py
+asserts this with assert_array_equal).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.launch.mesh import make_local_mesh
+from repro.runtime.sharding import BATCH_AXES, fit_spec
+
+__all__ = ["data_mesh", "replicate", "shard_batch"]
+
+
+def data_mesh(model: int = 1) -> Mesh:
+    """A whole-host ("data", "model") mesh for data-parallel serving —
+    the launch/mesh.py local-mesh shape, every device on "data" by
+    default."""
+    return make_local_mesh(model=model)
+
+
+def shard_batch(tree: Any, mesh: Optional[Mesh]) -> Any:
+    """device_put every array leaf with its leading (batch) axis over
+    the mesh's data axes; a PackedArray flattens to its ``words`` leaf,
+    so its leading word dim — whole packed rows — is what shards."""
+    if mesh is None:
+        return tree
+
+    def put(leaf):
+        shape = np.shape(leaf)
+        want = (BATCH_AXES,) + (None,) * (len(shape) - 1)
+        spec = fit_spec(shape, want, mesh)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree)
+
+
+def replicate(tree: Any, mesh: Optional[Mesh]) -> Any:
+    """device_put every leaf fully replicated — the parameter placement
+    for data-parallel serving (weights are read-only and small in the
+    packed layout; ZeRO-style parameter splits stay with the training
+    path in runtime/sharding.py)."""
+    if mesh is None:
+        return tree
+
+    def put(leaf):
+        return jax.device_put(leaf, NamedSharding(mesh, PartitionSpec()))
+
+    return jax.tree.map(put, tree)

@@ -1,0 +1,373 @@
+"""BNNServer: sharded, batch-bucketed serving over compile() (§9).
+
+The server wraps one :class:`~repro.graph.compile.CompiledBNN` + its
+bound parameters with the three things a deployment needs that the
+compiler does not provide:
+
+* **bucketed jit reuse** — request batches are right-padded to pow2
+  buckets (serving/bucketing.py) and the single jitted apply retraces
+  once per bucket, never per request; the compiled *plan* is reused
+  across every bucket (the server never calls ``graph.compile`` again)
+  and each new bucket's autotune keys are prefetched through
+  ``CompiledBNN.tuning_keys_for_batch`` -> ``kernels.autotune.warm``;
+* **data-parallel sharding** — inputs are placed with their batch axis
+  over the mesh "data" axis (PackedArray ``words`` leaf included) and
+  parameters replicated (serving/placement.py); results are
+  bit-identical to single-device execution;
+* **a micro-batch request queue** — ``submit`` returns a future,
+  requests are coalesced FIFO into micro-batches up to ``max_batch``
+  rows, dispatched either synchronously (``flush``) or by a background
+  worker thread (``start``/``stop``), with per-request latency
+  accounting and a ``stats()`` surface (queue depth, bucket hit rate,
+  padded-vs-real occupancy, HBM bytes/request from
+  ``CompiledBNN.traffic``).
+
+Inputs are float ``[B, H, W, C]`` arrays for image specs or
+``PackedArray [B, K]`` (packed on the last axis) for dense-entry
+specs; outputs keep the compiled pipeline's type (float logits or a
+PackedArray), always sliced back to the request's true row count.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import autotune
+from repro.kernels.packed import PackedArray
+from repro.serving.bucketing import bucket_for, pow2_ceil, split_rows, trace_bound
+from repro.serving.placement import replicate, shard_batch
+
+__all__ = ["BNNServer"]
+
+
+def _rows_of(x: Any) -> int:
+    """Leading-axis row count of a request payload."""
+    if isinstance(x, PackedArray):
+        return int(x.words.shape[0])
+    return int(np.shape(x)[0])
+
+
+def _pad_rows(x: Any, rows: int) -> Any:
+    """Right-pad the batch axis to ``rows`` with zeros (zero words are
+    all-(-1) under pm1; pad outputs are sliced off, never returned)."""
+    n = _rows_of(x)
+    if n == rows:
+        return x
+    if isinstance(x, PackedArray):
+        pads = [(0, rows - n)] + [(0, 0)] * (x.words.ndim - 1)
+        return x.with_words(jnp.pad(x.words, pads))
+    pads = [(0, rows - n)] + [(0, 0)] * (np.ndim(x) - 1)
+    return jnp.pad(jnp.asarray(x), pads)
+
+
+def _slice_rows(x: Any, start: int, stop: int) -> Any:
+    if isinstance(x, PackedArray):
+        return x.with_words(x.words[start:stop])
+    return x[start:stop]
+
+
+def _concat_rows(xs: Sequence[Any]) -> Any:
+    """Concatenate request payloads along the batch axis (PackedArray
+    metadata must agree — same spec, so it always does)."""
+    if len(xs) == 1:
+        return xs[0]
+    first = xs[0]
+    if isinstance(first, PackedArray):
+        meta = (first.length, first.axis, first.values)
+        for x in xs[1:]:
+            if (x.length, x.axis, x.values) != meta:
+                raise ValueError("cannot coalesce differently-laid-out rows")
+        return first.with_words(jnp.concatenate([x.words for x in xs], axis=0))
+    return jnp.concatenate([jnp.asarray(x) for x in xs], axis=0)
+
+
+def _kind_of(x: Any) -> Tuple:
+    """The shape-minus-batch signature a jit trace is keyed on."""
+    if isinstance(x, PackedArray):
+        return ("packed", x.words.shape[1:], x.length, x.axis, x.values)
+    dt = getattr(x, "dtype", None)
+    if dt is None:
+        dt = jnp.asarray(x).dtype
+    return ("dense", tuple(np.shape(x)[1:]), str(dt))
+
+
+class _Request:
+    __slots__ = ("x", "rows", "kind", "future", "t_enqueue")
+
+    def __init__(
+        self, x: Any, rows: int, kind: Tuple, future: Future, t_enqueue: float
+    ):
+        self.x = x
+        self.rows = rows
+        self.kind = kind
+        self.future = future
+        self.t_enqueue = t_enqueue
+
+
+class BNNServer:
+    """Serving front door over a compiled BNN (see module docstring).
+
+    compiled: the CompiledBNN to serve; params: its bound parameter
+    tree (replicated onto ``mesh`` at construction); max_batch: bucket
+    ceiling, rounded up to a power of two; mesh: a jax Mesh with a
+    "data" axis for data-parallel dispatch, or None for single-device.
+    """
+
+    def __init__(self, compiled, params, max_batch: int = 32, mesh=None):
+        self.compiled = compiled
+        self.mesh = mesh
+        self.max_batch = pow2_ceil(max_batch)
+        self.params = replicate(params, mesh)
+        self._apply_jit = jax.jit(compiled.apply)
+        self._traced: set = set()
+        self._queue: deque = deque()
+        self._qlock = threading.Lock()
+        self._trace_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        self._latencies: deque = deque(maxlen=2048)
+        self._traffic_cache: Dict[int, int] = {}
+        self._n_requests = 0
+        self._n_rows = 0
+        self._n_batches = 0
+        self._bucket_hits = 0
+        self._bucket_misses = 0
+        self._padded_rows = 0
+        self._real_rows = 0
+        self._hbm_bytes = 0
+
+    # -- the bucketed, sharded dispatch core ------------------------- #
+    def trace_bound(self) -> int:
+        """Max jit traces this server can ever take per input kind."""
+        return trace_bound(self.max_batch)
+
+    def jit_traces(self) -> int:
+        """Ground-truth trace count of the single jitted apply (falls
+        back to the server's own bucket bookkeeping off-jax)."""
+        cache_size = getattr(self._apply_jit, "_cache_size", None)
+        if cache_size is not None:
+            return int(cache_size())
+        return len(self._traced)
+
+    def _warm_bucket(self, bucket: int) -> None:
+        """First touch of a bucket: prefetch every launch's autotune
+        key at this batch size — same plan, M rescaled (no recompile)."""
+        autotune.warm(self.compiled.tuning_keys_for_batch(bucket))
+
+    def _run(self, x: Any, bucket: int) -> Any:
+        xs = shard_batch(_pad_rows(x, bucket), self.mesh)
+        return jax.block_until_ready(self._apply_jit(self.params, xs))
+
+    def _dispatch(self, x: Any, rows: int) -> Any:
+        """Pad one micro-batch to its bucket, run the bucketed jit on
+        the (optionally sharded) inputs, slice the real rows back out.
+
+        Only a bucket's FIRST dispatch holds the trace lock across the
+        forward (so concurrent first touches cannot double-trace and
+        the per-bucket trace bound holds); warm buckets run lock-free
+        — jax dispatch is thread-safe — so one slow batch never
+        head-of-line blocks unrelated callers."""
+        bucket = bucket_for(rows, self.max_batch)
+        key = (bucket, _kind_of(x))
+        with self._trace_lock:
+            hit = key in self._traced
+            if not hit:
+                self._warm_bucket(bucket)
+                out = self._run(x, bucket)
+                self._traced.add(key)
+        if hit:
+            out = self._run(x, bucket)
+        with self._stats_lock:
+            if hit:
+                self._bucket_hits += 1
+            else:
+                self._bucket_misses += 1
+            self._n_batches += 1
+            self._padded_rows += bucket
+            self._real_rows += rows
+            self._hbm_bytes += self._bucket_traffic(bucket)
+        return _slice_rows(out, 0, rows)
+
+    def _bucket_traffic(self, bucket: int) -> int:
+        b = self._traffic_cache.get(bucket)
+        if b is None:
+            b = int(self.compiled.traffic(batch=bucket)["packed_bytes"])
+            self._traffic_cache[bucket] = b
+        return b
+
+    def apply_batch(self, x: Any) -> Any:
+        """Synchronous bucketed+sharded forward of one request batch
+        (chunked through ``max_batch`` when larger); bit-identical to
+        ``compiled.apply(params, x)``."""
+        rows = _rows_of(x)
+        t0 = time.perf_counter()
+        outs, off = [], 0
+        for chunk in split_rows(rows, self.max_batch):
+            outs.append(self._dispatch(_slice_rows(x, off, off + chunk), chunk))
+            off += chunk
+        with self._stats_lock:
+            self._n_requests += 1
+            self._n_rows += rows
+            self._latencies.append(time.perf_counter() - t0)
+        return outs[0] if len(outs) == 1 else _concat_rows(outs)
+
+    # -- the micro-batch request queue ------------------------------- #
+    def submit(self, x: Any) -> Future:
+        """Enqueue one request batch; the returned future resolves to
+        the sliced result once a micro-batch containing it runs.  The
+        row count and kind signature are computed HERE so a payload the
+        server cannot even inspect fails fast in the caller, never in
+        the worker loop."""
+        req = _Request(x, _rows_of(x), _kind_of(x), Future(), time.perf_counter())
+        with self._qlock:
+            self._queue.append(req)
+        self._wake.set()
+        return req.future
+
+    def queue_depth(self) -> int:
+        with self._qlock:
+            return len(self._queue)
+
+    def _take_microbatch(self) -> List[_Request]:
+        """Pop a FIFO run of requests whose rows coalesce under
+        ``max_batch`` (an oversized head request comes back alone and
+        is chunked by ``apply_batch`` semantics in ``_serve_one``).
+        Only same-kind payloads coalesce: a request whose trailing
+        shape/dtype differs from the head's starts its own micro-batch,
+        so one malformed request can never fail its neighbors'
+        futures."""
+        taken: List[_Request] = []
+        total = 0
+        kind = None
+        with self._qlock:
+            while self._queue:
+                nxt = self._queue[0]
+                if taken and total + nxt.rows > self.max_batch:
+                    break
+                if taken and nxt.kind != kind:
+                    break
+                if not taken:
+                    kind = nxt.kind
+                taken.append(self._queue.popleft())
+                total += nxt.rows
+                if total >= self.max_batch:
+                    break
+        return taken
+
+    def _serve_one(self, taken: List[_Request]) -> None:
+        """Run one coalesced micro-batch and resolve its futures."""
+        try:
+            x = _concat_rows([r.x for r in taken])
+            rows = sum(r.rows for r in taken)
+            outs, off = [], 0
+            for chunk in split_rows(rows, self.max_batch):
+                outs.append(self._dispatch(_slice_rows(x, off, off + chunk), chunk))
+                off += chunk
+            out = outs[0] if len(outs) == 1 else _concat_rows(outs)
+        except Exception as e:
+            for r in taken:
+                r.future.set_exception(e)
+            return
+        t_done = time.perf_counter()
+        off = 0
+        for r in taken:
+            r.future.set_result(_slice_rows(out, off, off + r.rows))
+            off += r.rows
+            with self._stats_lock:
+                self._n_requests += 1
+                self._n_rows += r.rows
+                self._latencies.append(t_done - r.t_enqueue)
+
+    def flush(self) -> int:
+        """Drain the queue synchronously; returns micro-batches run."""
+        n = 0
+        while True:
+            taken = self._take_microbatch()
+            if not taken:
+                return n
+            self._serve_one(taken)
+            n += 1
+
+    # -- async worker ------------------------------------------------- #
+    def start(self) -> "BNNServer":
+        """Spawn the background dispatch thread (idempotent)."""
+        if self._worker is not None and self._worker.is_alive():
+            return self
+        self._stop.clear()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._wake.wait(timeout=0.05)
+            self._wake.clear()
+            try:
+                self.flush()
+            except Exception:
+                # per-request failures already resolve their own
+                # futures inside _serve_one; anything that still
+                # escapes must not kill the worker and strand the queue
+                continue
+        self.flush()
+
+    def stop(self) -> None:
+        """Stop the worker after draining what is already queued."""
+        if self._worker is None:
+            return
+        self._stop.set()
+        self._wake.set()
+        self._worker.join()
+        self._worker = None
+
+    # -- observability ------------------------------------------------ #
+    def stats(self) -> Dict[str, Any]:
+        """The serving counters (DESIGN.md §9 schema): request/row
+        totals, dispatch and bucket-reuse counts, jit trace count vs
+        the policy bound, padded-vs-real occupancy, HBM bytes/request
+        from the compiled traffic model, and latency aggregates."""
+        with self._stats_lock:  # snapshot: writers hold the same locks
+            lat = sorted(self._latencies)
+            requests, rows = self._n_requests, self._n_rows
+            batches = self._n_batches
+            hits, misses = self._bucket_hits, self._bucket_misses
+            padded, real = self._padded_rows, self._real_rows
+            hbm = self._hbm_bytes
+        with self._trace_lock:
+            buckets = sorted({b for b, _ in self._traced})
+        dispatches = hits + misses
+        stats = {
+            "requests": requests,
+            "rows": rows,
+            "batches": batches,
+            "queue_depth": self.queue_depth(),
+            "buckets_traced": buckets,
+            "bucket_hits": hits,
+            "bucket_misses": misses,
+            "bucket_hit_rate": hits / dispatches if dispatches else 0.0,
+            "jit_traces": self.jit_traces(),
+            "trace_bound": self.trace_bound(),
+            "padded_rows": padded,
+            "real_rows": real,
+            "occupancy": real / padded if padded else 0.0,
+            "hbm_bytes": hbm,
+            "hbm_bytes_per_request": hbm / max(requests, 1),
+            "devices": 1 if self.mesh is None else self.mesh.size,
+        }
+        if lat:
+            stats["latency_s"] = {
+                "mean": float(np.mean(lat)),
+                "p50": float(lat[len(lat) // 2]),
+                "max": float(lat[-1]),
+            }
+        return stats

@@ -1,11 +1,29 @@
 """Shared test helpers.
 
+The suite runs on a 4-virtual-device CPU host: the XLA flag below must
+land before jax initializes its backend, and pytest imports conftest
+before any test module pulls jax in, so this is the one reliable place
+to set it.  Single-device behavior is unchanged (jax places unsharded
+work on device 0); the flag is what lets tests/test_serving.py assert
+sharded-vs-single-device bit-identity in-process, and it is skipped
+when the environment already forces a device count (e.g. a real
+multi-device host or an outer harness).
+
 hypothesis is an optional test extra (pyproject [project.optional-
 dependencies] test): when absent, the fake `given`/`settings`/`st`
 exported here make property tests self-skip instead of failing
 collection.  Test modules import these via `from conftest import ...`
 (pytest puts the tests dir on sys.path for rootdir-style collection).
 """
+import os
+import sys
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = \
+            (_flags + " --xla_force_host_platform_device_count=4").strip()
+
 import pytest
 
 try:

@@ -285,9 +285,9 @@ def test_binary_conv_accepts_foldedthreshold():
 # ------------------------------------------------------------------ #
 def test_conv_geometry_recovered_from_paper_tables():
     bn = binarynet_cifar10()
-    assert [infer_conv_geometry(l) for l in bn.conv] == [(1, 1)] * 6
+    assert [infer_conv_geometry(c) for c in bn.conv] == [(1, 1)] * 6
     al = alexnet_imagenet()
-    geo = [infer_conv_geometry(l) for l in al.conv]
+    geo = [infer_conv_geometry(c) for c in al.conv]
     assert geo == [(4, 0), (1, 2), (1, 1), (1, 1), (1, 1)]
     assert infer_pool(32, 16) == (2, 2)          # BinaryNet
     assert infer_pool(55, 27) == (3, 2)          # AlexNet pool1

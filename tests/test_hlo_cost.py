@@ -73,7 +73,7 @@ ENTRY %main (p: (s32[], f32[4,4])) -> f32[4,4] {
   %p = (s32[], f32[4,4]) parameter(0)
   %g = f32[4,4]{1,0} get-tuple-element(%p), index=1
   %t = (s32[], f32[2,2], /*index=2*/f32[4,4]) tuple(%g, %g, %g)
-  ROOT %d = f32[4,4]{1,0} dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %d = f32[4,4] dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
 }
 """
     comps = parse_module(txt)

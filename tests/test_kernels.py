@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + fused
 epilogues + hypothesis property tests, all in interpret mode on CPU."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -7,8 +7,6 @@ import pytest
 
 from repro.configs import ARCHS, reduced
 from repro.models import decode_step, forward, init_params, prefill
-from repro.models.layers import logits_apply
-from repro.models.model import _ctx_from_inputs
 
 
 @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mixtral-8x22b"])

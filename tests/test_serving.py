@@ -1,0 +1,253 @@
+"""The serving engine: bucketing policy, trace bounds, the micro-batch
+queue, and sharded-vs-single-device bit-identity (DESIGN.md §9).
+
+Whole-net dispatch runs on backend="xla" (interpret mode is far too
+slow for full networks — see tests/test_graph.py); the mesh tests need
+the 4 virtual CPU devices conftest.py forces, and skip on hosts where
+the flag could not land.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import graph
+from repro.kernels.autotune import get_table
+from repro.kernels.ops import binarize_pack
+from repro.serving import (BNNServer, bucket_for, bucket_sizes, data_mesh,
+                           pow2_ceil, split_rows, trace_bound)
+
+MULTIDEV = len(jax.devices()) >= 4
+needs_mesh = pytest.mark.skipif(
+    not MULTIDEV, reason="needs >= 4 devices (conftest XLA flag)")
+
+
+def _mlp_server(max_batch=8, mesh=None, d0=256, hidden=(128, 64),
+                batch=4):
+    spec = graph.from_dense_stack(d0, list(hidden), name="srv_mlp")
+    cb = graph.compile(spec, backend="xla", batch=batch)
+    params = cb.init(jax.random.PRNGKey(0))
+    return cb, params, BNNServer(cb, params, max_batch=max_batch,
+                                 mesh=mesh)
+
+
+def _packed(rng, rows, d0=256):
+    x = jnp.asarray(rng.normal(size=(rows, d0)).astype(np.float32))
+    return binarize_pack(x, backend="xla")
+
+
+# ------------------------------------------------------------------ #
+# bucketing policy                                                     #
+# ------------------------------------------------------------------ #
+def test_bucket_edges():
+    assert bucket_for(1, 32) == 1                   # batch of one
+    assert bucket_for(32, 32) == 32                 # exact pow2: itself
+    assert bucket_for(8, 32) == 8
+    assert bucket_for(5, 32) == 8                   # pow2 ceiling
+    assert bucket_for(17, 32) == 32
+    with pytest.raises(ValueError):                 # > max bucket
+        bucket_for(33, 32)
+    with pytest.raises(ValueError):
+        pow2_ceil(0)
+
+
+def test_bucket_sizes_and_trace_bound():
+    assert bucket_sizes(8) == (1, 2, 4, 8)
+    assert trace_bound(8) == 4
+    assert trace_bound(1) == 1
+    with pytest.raises(ValueError):                 # non-pow2 ceiling
+        bucket_sizes(12)
+
+
+def test_split_rows_oversized():
+    assert split_rows(70, 32) == [32, 32, 6]
+    assert split_rows(32, 32) == [32]
+    assert split_rows(3, 32) == [3]
+    with pytest.raises(ValueError):
+        split_rows(0, 32)
+
+
+# ------------------------------------------------------------------ #
+# bucketed dispatch: bit-identity + trace bound                        #
+# ------------------------------------------------------------------ #
+def test_ragged_batches_bit_identical_to_direct_apply():
+    cb, params, srv = _mlp_server(max_batch=8)
+    rng = np.random.default_rng(0)
+    for rows in (1, 3, 8, 5):
+        xp = _packed(rng, rows)
+        ref = cb.apply(params, xp)
+        got = srv.apply_batch(xp)
+        assert got.length == ref.length and got.axis == ref.axis
+        np.testing.assert_array_equal(np.asarray(got.words),
+                                      np.asarray(ref.words))
+
+
+def test_trace_count_bounded_by_buckets():
+    cb, params, srv = _mlp_server(max_batch=8)
+    rng = np.random.default_rng(1)
+    for rows in (1, 2, 3, 4, 5, 6, 7, 8, 1, 5, 8):
+        srv.apply_batch(_packed(rng, rows))
+    st = srv.stats()
+    assert st["buckets_traced"] == [1, 2, 4, 8]
+    # ground truth from the jit cache itself, not just our bookkeeping
+    assert srv.jit_traces() <= srv.trace_bound() == trace_bound(8)
+    # re-dispatching every size again adds no traces, only hits
+    before = srv.jit_traces()
+    for rows in (1, 2, 3, 4, 5, 6, 7, 8):
+        srv.apply_batch(_packed(rng, rows))
+    assert srv.jit_traces() == before
+    assert srv.stats()["bucket_hits"] >= 8
+
+
+def test_oversized_request_chunks_through_max_batch():
+    cb, params, srv = _mlp_server(max_batch=4)
+    rng = np.random.default_rng(2)
+    xp = _packed(rng, 11)                           # 4 + 4 + 3
+    ref = cb.apply(params, xp)
+    got = srv.apply_batch(xp)
+    np.testing.assert_array_equal(np.asarray(got.words),
+                                  np.asarray(ref.words))
+    st = srv.stats()
+    assert st["batches"] == 3 and st["rows"] == 11
+    assert srv.jit_traces() <= trace_bound(4)
+
+
+def test_stats_occupancy_and_traffic_accounting():
+    cb, params, srv = _mlp_server(max_batch=8)
+    rng = np.random.default_rng(3)
+    srv.apply_batch(_packed(rng, 3))                # bucket 4
+    st = srv.stats()
+    assert st["padded_rows"] == 4 and st["real_rows"] == 3
+    assert st["occupancy"] == pytest.approx(0.75)
+    assert st["hbm_bytes"] == cb.traffic(batch=4)["packed_bytes"]
+    assert st["hbm_bytes_per_request"] == st["hbm_bytes"]
+    assert st["latency_s"]["max"] > 0
+
+
+def test_bucket_warm_prefetches_tuning_keys():
+    cb, params, srv = _mlp_server(max_batch=8)
+    rng = np.random.default_rng(4)
+    srv.apply_batch(_packed(rng, 5))                # bucket 8
+    for key in cb.tuning_keys_for_batch(8):
+        assert get_table().get(key) is not None
+
+
+# ------------------------------------------------------------------ #
+# plan reuse across buckets (no recompile)                             #
+# ------------------------------------------------------------------ #
+def test_tuning_keys_for_batch_matches_fresh_compile():
+    """The rescaled keys must be exactly what a fresh compile at that
+    batch would prefetch — the no-drift guarantee that lets the server
+    reuse ONE plan across every bucket."""
+    spec = graph.from_dense_stack(256, [128, 128, 64], name="kchk")
+    cb = graph.compile(spec, backend="xla", batch=8)
+    for b in (1, 2, 4, 8, 16):
+        fresh = graph.compile(spec, backend="xla", batch=b).tuning_keys
+        assert cb.tuning_keys_for_batch(b) == fresh
+    assert cb.tuning_keys_for_batch(8) is cb.tuning_keys
+
+
+def test_tuning_keys_for_batch_conv_spec():
+    from repro.core.workloads import binarynet_cifar10
+    wl = binarynet_cifar10()
+    cb = graph.compile(wl, backend="xla", batch=4)
+    for b in (1, 2, 8):
+        fresh = graph.compile(wl, backend="xla", batch=b).tuning_keys
+        assert cb.tuning_keys_for_batch(b) == fresh
+
+
+# ------------------------------------------------------------------ #
+# the micro-batch queue                                                #
+# ------------------------------------------------------------------ #
+def test_queue_drain_bursty_arrival():
+    cb, params, srv = _mlp_server(max_batch=8)
+    rng = np.random.default_rng(5)
+    sizes = (2, 2, 2, 2, 5, 3, 8, 1)
+    xs = [_packed(rng, r) for r in sizes]
+    refs = [cb.apply(params, x) for x in xs]
+    futs = [srv.submit(x) for x in xs]              # burst, no worker
+    assert srv.queue_depth() == len(sizes)
+    n_micro = srv.flush()
+    assert srv.queue_depth() == 0
+    # FIFO coalescing packed the burst into fewer dispatches
+    assert n_micro < len(sizes)
+    for fut, ref in zip(futs, refs):
+        got = fut.result(timeout=5)
+        np.testing.assert_array_equal(np.asarray(got.words),
+                                      np.asarray(ref.words))
+    st = srv.stats()
+    assert st["requests"] == len(sizes)
+    assert st["latency_s"]["mean"] > 0
+
+
+def test_mismatched_request_does_not_fail_neighbors():
+    """Only same-kind payloads coalesce: a malformed request (wrong
+    input width for the spec) fails alone; the valid requests around
+    it still resolve."""
+    cb, params, srv = _mlp_server(max_batch=8)
+    rng = np.random.default_rng(8)
+    good1, bad, good2 = _packed(rng, 2), _packed(rng, 2, d0=64), \
+        _packed(rng, 2)
+    refs = [cb.apply(params, good1), cb.apply(params, good2)]
+    f1, fb, f2 = srv.submit(good1), srv.submit(bad), srv.submit(good2)
+    srv.flush()
+    for fut, ref in zip((f1, f2), refs):
+        np.testing.assert_array_equal(np.asarray(fut.result(timeout=5).words),
+                                      np.asarray(ref.words))
+    with pytest.raises(Exception):
+        fb.result(timeout=5)
+
+
+def test_worker_thread_async_dispatch():
+    cb, params, srv = _mlp_server(max_batch=8)
+    rng = np.random.default_rng(6)
+    srv.start()
+    try:
+        sizes = (1, 4, 3, 8, 2)
+        xs = [_packed(rng, r) for r in sizes]
+        refs = [cb.apply(params, x) for x in xs]
+        futs = [srv.submit(x) for x in xs]
+        for fut, ref in zip(futs, refs):
+            got = fut.result(timeout=60)
+            np.testing.assert_array_equal(np.asarray(got.words),
+                                          np.asarray(ref.words))
+    finally:
+        srv.stop()
+    assert srv.queue_depth() == 0
+    assert srv.jit_traces() <= srv.trace_bound()
+
+
+# ------------------------------------------------------------------ #
+# sharded vs single-device bit-identity                                #
+# ------------------------------------------------------------------ #
+@needs_mesh
+def test_sharded_packed_words_bit_identical():
+    mesh = data_mesh()
+    cb, params, _ = _mlp_server()
+    srv_mesh = BNNServer(cb, params, max_batch=8, mesh=mesh)
+    srv_one = BNNServer(cb, params, max_batch=8, mesh=None)
+    rng = np.random.default_rng(7)
+    for rows in (1, 2, 3, 4, 8, 11):                # incl. non-divisible
+        xp = _packed(rng, rows)
+        a = srv_mesh.apply_batch(xp)
+        b = srv_one.apply_batch(xp)
+        np.testing.assert_array_equal(np.asarray(a.words),
+                                      np.asarray(b.words))
+    assert srv_mesh.stats()["devices"] == mesh.size
+
+
+@needs_mesh
+def test_sharded_binarynet_logits_bit_identical():
+    """The acceptance gate: BinaryNet through a 4-virtual-device data
+    mesh equals the single-device compiled apply EXACTLY, with the
+    trace count pinned to one per bucket."""
+    from repro.core.workloads import binarynet_cifar10
+    cb = graph.compile(binarynet_cifar10(), backend="xla", batch=4)
+    params = cb.init(jax.random.PRNGKey(0))
+    srv = BNNServer(cb, params, max_batch=4, mesh=data_mesh())
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32, 32, 3),
+                          jnp.float32)
+    ref = cb.apply(params, x)
+    got = srv.apply_batch(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert srv.jit_traces() <= 1

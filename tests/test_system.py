@@ -5,11 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, all_cells, get_arch, reduced
-from repro.core.energy import (CellSpecs, PAPER_TABLE4, TULIP, YODANN,
+from repro.core.energy import (PAPER_TABLE4, TULIP, YODANN, CellSpecs,
                                calibrate, calibrate_tulip, evaluate)
 from repro.core.workloads import WORKLOADS
-from repro.models import init_params
 from repro.launch.serve import Engine, Request
+from repro.models import init_params
 
 
 def test_assignment_grid_is_complete():

@@ -7,11 +7,11 @@ import pytest
 from repro.core import threshold as th
 from repro.core.adder_tree import (build_tree, make_ext_inputs,
                                    schedule_tree, storage_bound)
-from repro.core.schedules import (add_fragment, compare_fragment,
+from repro.core.schedules import (accumulate_fragment, add_fragment,
+                                  compare_fragment, copy_fragment,
                                   fragments_to_program, leaf_fragment,
-                                  maxpool_fragment, relu_fragment,
-                                  accumulate_fragment, copy_fragment)
-from repro.core.tulip_pe import read_value, run_numpy, run_jax, write_value
+                                  maxpool_fragment, relu_fragment)
+from repro.core.tulip_pe import read_value, run_jax, run_numpy, write_value
 
 
 # ------------------------------------------------------------------ #
