@@ -56,17 +56,38 @@ def model_bytes(m, k, n):
     }
 
 
-def _wall(fn, *args, iters=3, **kw):
-    """Median wall-time of fn(*args) with block_until_ready."""
+def _block(out):
+    jax.tree.map(
+        lambda a: a.block_until_ready() if hasattr(
+            a, "block_until_ready") else a, out)
+
+
+def _wall(fn, *args, iters=5, warmup=1, **kw):
+    """Median wall-time of fn(*args): ``warmup`` untimed calls first
+    (jit tracing + cache fill never pollutes a sample), then ``iters``
+    timed repeats, each fenced with block_until_ready so async
+    dispatch cannot hide device time; the median deflects scheduler
+    outliers a mean would absorb."""
+    for _ in range(warmup):
+        _block(fn(*args, **kw))
     ts = []
-    for _ in range(iters + 1):        # first call compiles; dropped
-        t0 = time.time()
-        out = fn(*args, **kw)
-        jax.tree.map(
-            lambda a: a.block_until_ready() if hasattr(
-                a, "block_until_ready") else a, out)
-        ts.append(time.time() - t0)
-    return float(np.median(ts[1:]))
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _env():
+    """Provenance block stamped into every BENCH_*.json: a number is
+    only comparable against the runtime that produced it."""
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+    }
 
 
 def run(log=print, out_json=DEFAULT_OUT):
@@ -126,8 +147,9 @@ def run(log=print, out_json=DEFAULT_OUT):
         ", ".join(f"{k_}={v * 1e3:.2f}ms" for k_, v in measured.items()
                   if k_.endswith("_s")))
 
-    out = {"hbm_bw_model": HBM_BW, "peak_flops_model": PEAK,
-           "roofline": rows, "spot_check_s": spot_s, "measured": measured}
+    out = {"env": _env(), "hbm_bw_model": HBM_BW,
+           "peak_flops_model": PEAK, "roofline": rows,
+           "spot_check_s": spot_s, "measured": measured}
     if out_json:
         with open(out_json, "w") as f:
             json.dump(out, f, indent=1)
@@ -213,7 +235,7 @@ def run_fused(log=print, out_json=FUSED_OUT, smoke=False):
             f"csa {t_csa * 1e3:7.2f}ms ({t_cube / t_csa:.2f}x) | "
             f"bit-identical OK")
 
-    out = {"host_backend": jax.default_backend(),
+    out = {"env": _env(), "host_backend": jax.default_backend(),
            "backends_checked": backends,
            "smoke": smoke,
            "fused": rows}
@@ -336,7 +358,7 @@ def run_conv(log=print, out_json=CONV_OUT, smoke=False):
             f"-> {tr['packed_bytes'] / 1e6:.1f}MB packed "
             f"({tr['ratio_bf16_over_packed']:.1f}x)")
 
-    out = {"host_backend": jax.default_backend(),
+    out = {"env": _env(), "host_backend": jax.default_backend(),
            "backends_checked": backends, "smoke": smoke,
            "conv": rows, "workload_traffic": workloads}
     if out_json:
@@ -433,7 +455,7 @@ def run_compile(log=print, out_json=COMPILE_OUT, smoke=False):
             f"({tr['ratio_bf16_over_packed']:.1f}x) | Table III OK | "
             f"{row['tuning_keys_prefetched']} autotune keys")
 
-    out = {"host_backend": jax.default_backend(),
+    out = {"env": _env(), "host_backend": jax.default_backend(),
            "backends_checked": backends, "smoke": smoke,
            "workloads": rows}
     if out_json:
@@ -444,28 +466,35 @@ def run_compile(log=print, out_json=COMPILE_OUT, smoke=False):
 
 
 def run_serve(log=print, out_json=SERVE_OUT, smoke=False):
-    """The serving engine over compile() (ISSUE 5 acceptance).
+    """The serving engine over compile() (ISSUE 5 + ISSUE 6 acceptance).
 
-    Four claims:
-      * bit-identity gate: BNNServer output on a multi-virtual-device
-        data mesh equals plain single-device CompiledBNN.apply EXACTLY
-        — float logits for BinaryNet, packed words
-        (assert_array_equal) for a dense stack; raises on divergence
-        (the CI bench-smoke step runs exactly this under
+    Claims, in order:
+      * bit-identity gates: (a) BNNServer output on a multi-virtual-
+        device data mesh equals plain single-device CompiledBNN.apply
+        EXACTLY — float logits for BinaryNet, packed words for a dense
+        stack; (b) the ragged-masked forward apply(..., valid_rows=r)
+        equals the unmasked forward's first r rows bit-for-bit; raises
+        on divergence (the CI bench-smoke step runs exactly this under
         XLA_FLAGS=--xla_force_host_platform_device_count=4);
       * throughput vs batch size through the bucketed dispatch path,
-        with the jit-trace count pinned to the bucket bound;
-      * device-count scaling: the same fixed batch on a 1-device vs
-        whole-host mesh (on a CPU host this measures partition
-        overhead, not speedup — the number is the regression anchor
-        for real multi-device hosts);
-      * bucket-padding overhead: ragged row counts vs exact-pow2, as
-        padded-vs-real occupancy and wall-time ratio.
+        with the jit-trace count pinned to the ragged dispatch grid;
+      * device-count scaling: the same fixed compute-dominated batch
+        on a 1-device vs whole-host mesh, through the production
+        apply_batch path — the full (tracked) run GATES on
+        speedup > 1;
+      * continuous-batching stream: a request stream through the
+        started worker (admission window + dispatch-ahead) vs the same
+        requests applied synchronously back-to-back;
+      * ragged-padding overhead: each ragged row count vs a jit traced
+        at EXACTLY that shape — the honest denominator — with the
+        full-bucket wall recorded as the cost masking avoids; the full
+        run GATES on overhead_vs_exact < 1.5 at every point.
     """
     from repro import graph
     from repro.core.workloads import binarynet_cifar10
     from repro.kernels.ops import binarize_pack
-    from repro.serving import BNNServer, data_mesh, trace_bound
+    from repro.serving import (BNNServer, bucket_for, data_mesh,
+                               ragged_valid, shard_batch)
 
     n_dev = len(jax.devices())
     mesh = data_mesh() if n_dev > 1 else None
@@ -473,15 +502,24 @@ def run_serve(log=print, out_json=SERVE_OUT, smoke=False):
         f"{'data=' + str(n_dev) if mesh is not None else 'none'}) ==")
     rng = np.random.default_rng(0)
 
-    # -- bit-identity gate: sharded vs single-device ------------------ #
-    d0, hidden = (128, [128, 64]) if smoke else (512, [512, 256, 64])
+    # smoke keeps CI fast; the full run uses a compute-dominated model
+    # (per-dispatch work >> partition/dispatch overhead) because that
+    # is the regime where serving a mesh is supposed to win
+    d0, hidden, max_batch = ((128, [128, 64], 8) if smoke
+                             else (2048, [2048, 2048, 1024], 128))
     spec = graph.from_dense_stack(d0, hidden, name="serve_mlp")
-    cb = graph.compile(spec, backend="xla", batch=8)
+    cb = graph.compile(spec, backend="xla", batch=max_batch)
     params = cb.init(jax.random.PRNGKey(0))
-    xp = binarize_pack(jnp.asarray(
-        rng.normal(size=(11, d0)).astype(np.float32)), backend="xla")
+
+    def packed(rows):
+        return binarize_pack(jnp.asarray(
+            rng.normal(size=(rows, d0)).astype(np.float32)),
+            backend="xla")
+
+    # -- bit-identity gate: sharded vs single-device ------------------ #
+    xp = packed(11)
     ref = cb.apply(params, xp)
-    srv = BNNServer(cb, params, max_batch=8, mesh=mesh)
+    srv = BNNServer(cb, params, max_batch=max_batch, mesh=mesh)
     got = srv.apply_batch(xp)
     np.testing.assert_array_equal(
         np.asarray(got.words), np.asarray(ref.words),
@@ -498,26 +536,34 @@ def run_serve(log=print, out_json=SERVE_OUT, smoke=False):
     np.testing.assert_array_equal(
         np.asarray(got_logits), np.asarray(ref_logits),
         err_msg="sharded BinaryNet logits diverge from single-device")
-    log(f"bit-identity gate OK (packed words + BinaryNet logits, "
-        f"{n_dev} virtual devices vs 1)")
+
+    # -- bit-identity gate: masked vs unmasked forward ---------------- #
+    xm = packed(max_batch)
+    full_words = np.asarray(cb.apply(params, xm).words)
+    for r in (3, max_batch // 2 + 1, max_batch):
+        masked = cb.apply(params, xm, valid_rows=r)
+        np.testing.assert_array_equal(
+            np.asarray(masked.words), full_words[:r],
+            err_msg=f"masked forward (valid_rows={r}) diverges from "
+                    f"the unmasked forward's first {r} rows")
+    log(f"bit-identity gates OK (sharded words + logits on {n_dev} "
+        f"virtual devices; masked == unmasked on valid rows)")
 
     # -- throughput vs batch size ------------------------------------- #
-    batches = [1, 4, 8] if smoke else [1, 4, 16, 64]
-    tsrv = BNNServer(cb, params, max_batch=max(batches), mesh=mesh)
+    batches = [1, 4, 8] if smoke else [1, 8, 32, max_batch]
+    tsrv = BNNServer(cb, params, max_batch=max_batch, mesh=mesh)
     thr_rows = []
     for b in batches:
-        xb = binarize_pack(jnp.asarray(
-            rng.normal(size=(b, d0)).astype(np.float32)), backend="xla")
+        xb = packed(b)
         t = _wall(tsrv.apply_batch, xb)
         thr_rows.append({"batch": b, "wall_s": t, "rows_per_s": b / t})
         log(f"batch {b:>3d}: {t * 1e3:7.2f}ms  {b / t:9.1f} rows/s")
-    assert tsrv.jit_traces() <= trace_bound(tsrv.max_batch), \
-        "bucketed dispatch exceeded its trace bound"
+    assert tsrv.jit_traces() <= tsrv.trace_bound(), \
+        "bucketed dispatch exceeded its ragged trace bound"
 
     # -- device-count scaling on the same fixed batch ----------------- #
     bfix = batches[-1]
-    xf = binarize_pack(jnp.asarray(
-        rng.normal(size=(bfix, d0)).astype(np.float32)), backend="xla")
+    xf = packed(bfix)
     s1 = BNNServer(cb, params, max_batch=bfix, mesh=None)
     t1 = _wall(s1.apply_batch, xf)
     scaling = {"batch": bfix, "devices_1_wall_s": t1}
@@ -529,45 +575,101 @@ def run_serve(log=print, out_json=SERVE_OUT, smoke=False):
         log(f"device scaling @batch={bfix}: 1 dev {t1 * 1e3:.2f}ms vs "
             f"{n_dev} dev {tn * 1e3:.2f}ms ({t1 / tn:.2f}x)")
 
-    # -- bucket-padding overhead -------------------------------------- #
-    exact_wall = {r["batch"]: r["wall_s"] for r in thr_rows}
+    # -- continuous-batching stream vs synchronous loop --------------- #
+    # many small same-kind requests: exactly the traffic the admission
+    # window exists for — the worker coalesces them into a few large
+    # dispatches (and overlaps host prep with device compute) where
+    # the sync loop pays one small dispatch per request
+    n_req, rows_each = (8, 2) if smoke else (32, 8)
+    payloads = [packed(rows_each) for _ in range(n_req)]
 
-    def exact_bucket_wall(bucket):
-        if bucket not in exact_wall:
-            xe = binarize_pack(jnp.asarray(
-                rng.normal(size=(bucket, d0)).astype(np.float32)),
-                backend="xla")
-            pe = BNNServer(cb, params, max_batch=tsrv.max_batch,
-                           mesh=mesh)
-            exact_wall[bucket] = _wall(pe.apply_batch, xe)
-        return exact_wall[bucket]
+    def sync_loop():
+        for x in payloads:
+            tsrv.apply_batch(x)
+
+    t_sync = _wall(sync_loop, iters=3)
+    ssrv = BNNServer(cb, params, max_batch=max_batch, mesh=mesh).start()
+    try:
+        def stream():
+            futs = [ssrv.submit(x) for x in payloads]
+            for f in futs:
+                f.result(timeout=600)
+
+        t_stream = _wall(stream, iters=3)
+    finally:
+        ssrv.stop()
+    stream_stats = ssrv.stats()
+    runs = 4                          # 1 warmup + 3 timed repeats
+    rows_total = n_req * rows_each
+    stream_row = {
+        "requests": n_req, "rows_each": rows_each,
+        "rows_total": rows_total,
+        "sync_wall_s": t_sync, "stream_wall_s": t_stream,
+        "pipeline_speedup": t_sync / t_stream,
+        "rows_per_s_stream": rows_total / t_stream,
+        "dispatches_per_run": stream_stats["batches"] / runs,
+        "inflight_peak": stream_stats["inflight_peak"],
+    }
+    log(f"stream of {n_req} x {rows_each}-row requests: sync "
+        f"{t_sync * 1e3:.2f}ms vs pipelined {t_stream * 1e3:.2f}ms "
+        f"({t_sync / t_stream:.2f}x), coalesced into "
+        f"{stream_stats['batches'] / runs:.1f} dispatches/run, "
+        f"inflight peak {stream_stats['inflight_peak']}")
+
+    # -- ragged-padding overhead vs an exact-shape jit ---------------- #
+    psrv = BNNServer(cb, params, max_batch=max_batch, mesh=mesh)
+    exact_cache = {}
+
+    def exact_jit_wall(rows):
+        """Denominator: a jit traced at EXACTLY this row count, same
+        params placement and sharding — zero padding by construction."""
+        if rows not in exact_cache:
+            f = jax.jit(lambda p, x: cb.apply(p, x))
+            xs = shard_batch(packed(rows), mesh)
+            exact_cache[rows] = _wall(f, psrv.params, xs)
+        return exact_cache[rows]
 
     ragged = []
-    for rows in ([3, 5] if smoke else [3, 5, 9, 33]):
-        if rows > tsrv.max_batch:
-            continue
-        xr = binarize_pack(jnp.asarray(
-            rng.normal(size=(rows, d0)).astype(np.float32)),
-            backend="xla")
-        pr = BNNServer(cb, params, max_batch=tsrv.max_batch, mesh=mesh)
-        t_r = _wall(pr.apply_batch, xr)
-        bucket = pr.stats()["buckets_traced"][-1]
-        t_exact = exact_bucket_wall(bucket)
+    for rows in ([3, 5] if smoke else [3, 5, 9, 33, 66]):
+        xr = packed(rows)
+        t_r = _wall(psrv.apply_batch, xr)
+        bucket = bucket_for(rows, max_batch)
+        valid = ragged_valid(rows, bucket)
+        t_exact = exact_jit_wall(rows)
         ragged.append({
-            "rows": rows, "bucket": bucket, "wall_s": t_r,
+            "rows": rows, "bucket": bucket, "valid": valid,
+            "wall_s": t_r, "exact_jit_wall_s": t_exact,
+            "bucket_jit_wall_s": exact_jit_wall(bucket),
             "occupancy": rows / bucket,
+            "compute_occupancy": rows / valid,
             "overhead_vs_exact": t_r / t_exact})
-        log(f"rows {rows:>3d} -> bucket {bucket:>3d}: occupancy "
-            f"{rows / bucket:.2f}, wall {t_r * 1e3:7.2f}ms "
-            f"({t_r / t_exact:.2f}x the exact-bucket batch)")
+        log(f"rows {rows:>3d} -> bucket {bucket:>3d} masked to "
+            f"{valid:>3d}: wall {t_r * 1e3:7.2f}ms = "
+            f"{t_r / t_exact:.2f}x exact-shape jit (full bucket would "
+            f"cost {exact_jit_wall(bucket) / t_exact:.2f}x)")
 
-    stats = tsrv.stats()
-    out = {"host_backend": jax.default_backend(), "devices": n_dev,
-           "smoke": smoke, "throughput": thr_rows, "scaling": scaling,
-           "padding": ragged,
-           "server_stats": {k: v for k, v in stats.items()
-                            if not isinstance(v, dict)},
-           "bit_identity": "sharded == single-device (words + logits)"}
+    # -- the ISSUE 6 perf gates (full runs only: smoke shapes are too  #
+    #    small to measure anything but dispatch overhead) ------------- #
+    if not smoke:
+        if "speedup" in scaling:
+            assert scaling["speedup"] > 1.0, (
+                f"{n_dev}-device serving is SLOWER than 1 device "
+                f"({scaling['speedup']:.2f}x) — scaling gate failed")
+        for r in ragged:
+            assert r["overhead_vs_exact"] < 1.5, (
+                f"ragged rows={r['rows']} pays "
+                f"{r['overhead_vs_exact']:.2f}x over the exact-shape "
+                f"jit — padding gate failed")
+        log("perf gates OK (speedup > 1, every padding point < 1.5x)")
+
+    out = {"env": _env(), "host_backend": jax.default_backend(),
+           "devices": n_dev, "smoke": smoke,
+           "model": {"d0": d0, "hidden": hidden, "max_batch": max_batch},
+           "throughput": thr_rows, "scaling": scaling,
+           "stream": stream_row, "padding": ragged,
+           "server_stats": stream_stats,
+           "bit_identity": "sharded == single-device (words + logits); "
+                           "masked == unmasked on valid rows"}
     if out_json:
         with open(out_json, "w") as f:
             json.dump(out, f, indent=1)

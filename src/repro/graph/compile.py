@@ -43,7 +43,8 @@ from repro.core.workloads import Workload
 from repro.graph.ir import (BinaryConv, BinaryDense, BNNSpec,
                             IntegerEntry, MaxPool, from_dense_stack,
                             from_workload, spec_to_workload)
-from repro.graph.passes import PlanStep, build_plan, plan_tuning_keys
+from repro.graph.passes import (PlanStep, batches_tuning_keys, build_plan,
+                                plan_tuning_keys)
 from repro.kernels import ops as kops
 from repro.kernels.fused_mlp import fused_binary_mlp
 from repro.kernels.packed import PackedArray
@@ -124,6 +125,39 @@ class CompiledBNN:
                                 backend=self.backend,
                                 vmem_budget=self.vmem_budget)
 
+    def tuning_keys_for_batches(self, batches) -> Tuple[tuple, ...]:
+        """Deduplicated union of ``tuning_keys_for_batch`` over many
+        batch sizes — the serving engine's prewarm set: one call covers
+        every (bucket, ragged-valid) dispatch level the bucketing
+        policy admits (serving/bucketing.py ``dispatch_grid``)."""
+        return batches_tuning_keys(self.spec, self.plan, batches,
+                                   backend=self.backend,
+                                   vmem_budget=self.vmem_budget)
+
+    def serving_jit_kwargs(self, donate: bool = True) -> dict:
+        """The jit contract a serving engine wraps ``apply`` with —
+        owned by the compiler so the server cannot drift from the
+        executable's signature:
+
+        * ``valid_rows`` is a *static* argument (it changes launch
+          shapes — one trace per (bucket, valid) pair, bounded by the
+          bucketing policy);
+        * the batch input ``x`` (argnum 1) may be **donated**: its
+          buffer is consumed by the dispatch, letting XLA reuse the
+          allocation for same-shaped intermediates, so steady-state
+          serving stops allocating a fresh input block per batch on
+          backends that honor donation (TPU/GPU; CPU ignores it).
+          The caller must therefore pass a buffer it owns —
+          ``BNNServer`` pads/copies into a server-owned staging buffer
+          before every donated dispatch (DESIGN.md §10).  ``params``
+          (argnum 0) are NEVER donated: they are replicated once and
+          reused by every dispatch.
+        """
+        kw: dict = {"static_argnames": ("valid_rows",)}
+        if donate:
+            kw["donate_argnums"] = (1,)
+        return kw
+
     # -------------------------------------------------------------- #
     def init(self, key, threshold_range: int = 3,
              dtype=jnp.float32) -> Dict[str, Any]:
@@ -163,13 +197,22 @@ class CompiledBNN:
         return params
 
     # -------------------------------------------------------------- #
-    def apply(self, params: Dict[str, Any], x):
+    def apply(self, params: Dict[str, Any], x,
+              valid_rows: Optional[int] = None):
         """Execute the plan.  ``x``: float NHWC for image specs, a
         PackedArray [..., K0] for dense-entry specs.  Bit-identical to
         the legacy builder chain on pallas/interpret/xla; inter-layer
-        activations stay 1-bit (no int32 in HBM on kernel backends)."""
+        activations stay 1-bit (no int32 in HBM on kernel backends).
+
+        ``valid_rows`` (static) is the ragged last-bucket mask for
+        bucketed serving: only the first ``valid_rows`` rows are
+        computed and returned (``kernels.ops.mask_rows`` — the M-axis
+        twin of the pack epilogue's ``valid_n`` masking), so a
+        bucket-padded batch stops paying GEMM work for its pad rows.
+        Bit-identical to ``apply(params, x)[:valid_rows]``; under jit
+        it must be a static argument (``serving_jit_kwargs``)."""
         be = self.backend
-        h: Any = x
+        h: Any = x if valid_rows is None else kops.mask_rows(x, valid_rows)
         for step in self.plan:
             a = step.args
             if step.kind == "integer_conv":

@@ -36,7 +36,8 @@ from repro.graph.ir import (Binarize, BinaryConv, BinaryDense, BNNSpec,
 from repro.kernels.fused_mlp import stack_plan
 from repro.kernels.ops import plan_conv_launch, plan_dense_launch
 
-__all__ = ["PlanStep", "build_plan", "plan_tuning_keys"]
+__all__ = ["PlanStep", "batches_tuning_keys", "build_plan",
+           "plan_tuning_keys"]
 
 
 @dataclass(frozen=True)
@@ -171,6 +172,27 @@ def plan_tuning_keys(spec: BNNSpec, plan: Tuple[PlanStep, ...],
                             [t.per_channel for _, t in nds],
                             backend=backend, budget=vmem_budget)
             keys.append(sp["key"])
+    return tuple(keys)
+
+
+def batches_tuning_keys(spec: BNNSpec, plan: Tuple[PlanStep, ...],
+                        batches, backend: Optional[str] = None,
+                        vmem_budget: Optional[int] = None
+                        ) -> Tuple[tuple, ...]:
+    """Deduplicated union of ``plan_tuning_keys`` over many batch
+    sizes, in first-seen order.  The serving engine's ragged-mask
+    dispatch launches at *valid-row* counts, not just pow2 buckets, so
+    its prewarm set is the whole (bucket, valid) grid — and because the
+    backend's ``pad_m`` collapses nearby row counts onto the same
+    padded M, adjacent levels often resolve to identical keys, which is
+    why the union is deduplicated here rather than warmed per level."""
+    keys, seen = [], set()
+    for b in batches:
+        for k in plan_tuning_keys(spec, plan, b, backend=backend,
+                                  vmem_budget=vmem_budget):
+            if k not in seen:
+                seen.add(k)
+                keys.append(k)
     return tuple(keys)
 
 

@@ -44,7 +44,7 @@ from repro.kernels.popcount_gemm import popcount_gemm as _pop_kernel
 from repro.kernels.xnor_gemm import xnor_gemm as _xnor_kernel
 
 __all__ = ["binarize_pack", "binary_binary_dense", "binary_conv2d",
-           "binary_dense", "conv_padding", "default_backend",
+           "binary_dense", "conv_padding", "default_backend", "mask_rows",
            "plan_conv_launch", "plan_dense_launch"]
 
 Packable = Union[PackedArray, jax.Array]
@@ -109,6 +109,35 @@ def _as_packed_result(words: jax.Array, lead, m: int, n: int
     nw = (n + 31) // 32
     return PackedArray(words[:m, :nw].reshape(*lead, nw), length=n,
                        axis=-1)
+
+
+def mask_rows(x: Packable, valid_m: int) -> Packable:
+    """Row-validity masking for bucketed serving: keep only the first
+    ``valid_m`` rows of a batch (leading axis), statically.
+
+    This is the M-axis twin of the pack epilogue's ``valid_n`` column
+    masking: ``valid_n`` zeroes the pad *bits* a blocked launch would
+    otherwise leak into packed words, while ``mask_rows`` drops the pad
+    *rows* a bucket-padded batch would otherwise pay GEMM work for.
+    ``valid_m`` must be static (it changes the launch shape): the GEMM
+    wrappers then re-pad M only to the backend block multiple
+    (``pad_m``), so a 33-row request masked to 40 on the 64 bucket
+    launches a 40-row grid, not a 64-row one.  Rows are independent
+    throughout the datapath, so the kept rows are bit-identical to the
+    unmasked dispatch (tests/test_serving.py asserts this).
+    """
+    if isinstance(x, PackedArray):
+        rows = int(x.words.shape[0])
+        if not 1 <= valid_m <= rows:
+            raise ValueError(f"valid_m must be in [1, {rows}], "
+                             f"got {valid_m}")
+        if valid_m == rows:
+            return x
+        return x.with_words(x.words[:valid_m])
+    rows = int(np.shape(x)[0])
+    if not 1 <= valid_m <= rows:
+        raise ValueError(f"valid_m must be in [1, {rows}], got {valid_m}")
+    return x if valid_m == rows else x[:valid_m]
 
 
 def binarize_pack(x: jax.Array,

@@ -1,20 +1,31 @@
-"""The serving subsystem: BNNServer over compile() (DESIGN.md §9).
+"""The serving subsystem: BNNServer over compile() (DESIGN.md §9/§10).
 
 ``graph.compile`` turns a spec into an executable; this package turns
-that executable into a *service* — pow2 batch bucketing with a bounded
-jit-trace set, data-parallel mesh sharding that stays bit-identical to
-single-device execution, and a micro-batch request queue with latency
-accounting and a ``stats()`` surface.
+that executable into a *service* — pow2 batch bucketing with ragged
+row-validity masking and a bounded jit-trace set, data-parallel mesh
+sharding that stays bit-identical to single-device execution, and a
+continuously-batched request queue (admission window + dispatch-ahead
+overlap, donated input buffers) with latency percentiles and a
+``stats()`` surface.
 """
 
 from repro.serving.bucketing import (
     bucket_for,
     bucket_sizes,
+    dispatch_grid,
+    mask_levels,
+    mask_step,
     pow2_ceil,
+    ragged_valid,
     split_rows,
     trace_bound,
 )
-from repro.serving.placement import data_mesh, replicate, shard_batch
+from repro.serving.placement import (
+    data_mesh,
+    ensure_owned,
+    replicate,
+    shard_batch,
+)
 from repro.serving.server import BNNServer
 
 __all__ = [
@@ -22,7 +33,12 @@ __all__ = [
     "bucket_for",
     "bucket_sizes",
     "data_mesh",
+    "dispatch_grid",
+    "ensure_owned",
+    "mask_levels",
+    "mask_step",
     "pow2_ceil",
+    "ragged_valid",
     "replicate",
     "shard_batch",
     "split_rows",

@@ -20,13 +20,14 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.launch.mesh import make_local_mesh
 from repro.runtime.sharding import BATCH_AXES, fit_spec
 
-__all__ = ["data_mesh", "replicate", "shard_batch"]
+__all__ = ["data_mesh", "ensure_owned", "replicate", "shard_batch"]
 
 
 def data_mesh(model: int = 1) -> Mesh:
@@ -50,6 +51,21 @@ def shard_batch(tree: Any, mesh: Optional[Mesh]) -> Any:
         return jax.device_put(leaf, NamedSharding(mesh, spec))
 
     return jax.tree.map(put, tree)
+
+
+def ensure_owned(tree: Any) -> Any:
+    """Deep-copy every array leaf so the result is safe to *donate*.
+
+    The serving dispatch donates its input buffer (``CompiledBNN.
+    serving_jit_kwargs``); on backends that honor donation the buffer
+    is consumed and any other holder's view of it dies.  Padding and
+    coalescing already produce fresh server-owned buffers, but an
+    exact-bucket-sized single request would flow the CALLER'S array
+    straight into the donated slot — this copy is what keeps the
+    donation contract one-sided (the server only ever donates buffers
+    it created; a caller-held PackedArray is never invalidated,
+    tests/test_serving.py asserts it)."""
+    return jax.tree.map(lambda leaf: jnp.array(leaf, copy=True), tree)
 
 
 def replicate(tree: Any, mesh: Optional[Mesh]) -> Any:

@@ -1,26 +1,43 @@
-"""BNNServer: sharded, batch-bucketed serving over compile() (§9).
+"""BNNServer: continuously-batched, sharded serving over compile()
+(DESIGN.md §9 bucketing/sharding, §10 continuous batching).
 
 The server wraps one :class:`~repro.graph.compile.CompiledBNN` + its
-bound parameters with the three things a deployment needs that the
-compiler does not provide:
+bound parameters with the things a deployment needs that the compiler
+does not provide:
 
-* **bucketed jit reuse** — request batches are right-padded to pow2
-  buckets (serving/bucketing.py) and the single jitted apply retraces
-  once per bucket, never per request; the compiled *plan* is reused
-  across every bucket (the server never calls ``graph.compile`` again)
-  and each new bucket's autotune keys are prefetched through
-  ``CompiledBNN.tuning_keys_for_batch`` -> ``kernels.autotune.warm``;
+* **bucketed jit reuse with ragged masking** — request batches are
+  right-padded to pow2 buckets (serving/bucketing.py) but dispatched
+  with a *static row-validity count* (``CompiledBNN.apply(...,
+  valid_rows=)``), so a 33-row batch on the 64 bucket launches a
+  40-row GEMM grid, not a 64-row one; the jit trace count stays
+  bounded by ``trace_bound(max_batch, ragged=True)`` and the compiled
+  *plan* is reused across every (bucket, valid) level (autotune keys
+  prefetched through ``CompiledBNN.tuning_keys_for_batch``);
 * **data-parallel sharding** — inputs are placed with their batch axis
   over the mesh "data" axis (PackedArray ``words`` leaf included) and
   parameters replicated (serving/placement.py); results are
   bit-identical to single-device execution;
-* **a micro-batch request queue** — ``submit`` returns a future,
-  requests are coalesced FIFO into micro-batches up to ``max_batch``
-  rows, dispatched either synchronously (``flush``) or by a background
-  worker thread (``start``/``stop``), with per-request latency
-  accounting and a ``stats()`` surface (queue depth, bucket hit rate,
-  padded-vs-real occupancy, HBM bytes/request from
-  ``CompiledBNN.traffic``).
+* **continuous batching with dispatch-ahead** — ``submit`` returns a
+  future; the background dispatcher admits queued rows into a
+  not-yet-launched in-flight batch, holds the batch open for a short
+  admission window ONLY while the device is already busy (so the wait
+  is overlapped, never added to latency), and enqueues batch ``k+1``'s
+  device computation while batch ``k`` is still executing — jax
+  dispatch is asynchronous, and only the completer thread ever calls
+  ``block_until_ready``, at future-resolution time.  Up to
+  ``dispatch_ahead`` launched batches may be in flight at once;
+* **buffer donation** — the dispatch jit donates its input buffer
+  (``CompiledBNN.serving_jit_kwargs``), letting XLA reuse the
+  allocation on backends that honor donation; the server only ever
+  donates buffers it owns (padding/coalescing create them; an
+  exact-bucket caller array is defensively copied first —
+  ``placement.ensure_owned``), so a caller-held array is never
+  invalidated;
+* **observability** — ``stats()`` reports request/row/batch counters,
+  bucket reuse, trace counts vs the policy bound, padded-vs-valid-vs-
+  real occupancy, HBM bytes from ``CompiledBNN.traffic``, an
+  ``inflight_batches`` gauge, and p50/p95/p99 queue-wait and
+  end-to-end latency percentiles.
 
 Inputs are float ``[B, H, W, C]`` arrays for image specs or
 ``PackedArray [B, K]`` (packed on the last axis) for dense-entry
@@ -32,8 +49,10 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from collections import deque
 from concurrent.futures import Future
+from queue import Queue
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -42,10 +61,26 @@ import numpy as np
 
 from repro.kernels import autotune
 from repro.kernels.packed import PackedArray
-from repro.serving.bucketing import bucket_for, pow2_ceil, split_rows, trace_bound
-from repro.serving.placement import replicate, shard_batch
+from repro.serving.bucketing import (
+    bucket_for,
+    dispatch_grid,
+    pow2_ceil,
+    ragged_valid,
+    split_rows,
+    trace_bound,
+)
+from repro.serving.placement import ensure_owned, replicate, shard_batch
 
 __all__ = ["BNNServer"]
+
+
+def _filter_donation_warning() -> None:
+    """Donation is best-effort: backends that cannot alias a donated
+    buffer (CPU, or shape-mismatched outputs) ignore it with a
+    UserWarning per dispatch — pure noise at serving rates.  Filtered
+    at server construction (not import, and not once-per-process: test
+    harnesses reset the global filter list between tests)."""
+    warnings.filterwarnings("ignore", message="Some donated buffers were not usable")
 
 
 def _rows_of(x: Any) -> int:
@@ -57,7 +92,8 @@ def _rows_of(x: Any) -> int:
 
 def _pad_rows(x: Any, rows: int) -> Any:
     """Right-pad the batch axis to ``rows`` with zeros (zero words are
-    all-(-1) under pm1; pad outputs are sliced off, never returned)."""
+    all-(-1) under pm1; pad rows are masked off by ``valid_rows`` and
+    never reach a kernel).  Returns ``x`` itself when already sized."""
     n = _rows_of(x)
     if n == rows:
         return x
@@ -99,6 +135,22 @@ def _kind_of(x: Any) -> Tuple:
     return ("dense", tuple(np.shape(x)[1:]), str(dt))
 
 
+def _pcts(samples: List[float]) -> Dict[str, float]:
+    """mean/p50/p95/p99/max of a non-empty pre-sorted sample list."""
+    n = len(samples)
+
+    def pct(q: float) -> float:
+        return float(samples[min(n - 1, int(q * n))])
+
+    return {
+        "mean": float(np.mean(samples)),
+        "p50": pct(0.50),
+        "p95": pct(0.95),
+        "p99": pct(0.99),
+        "max": float(samples[-1]),
+    }
+
+
 class _Request:
     __slots__ = ("x", "rows", "kind", "future", "t_enqueue")
 
@@ -112,21 +164,63 @@ class _Request:
         self.t_enqueue = t_enqueue
 
 
+class _Flight:
+    """One launched-but-unresolved micro-batch: its admitted requests
+    and the (async, not yet block_until_ready'd) chunk outputs."""
+
+    __slots__ = ("reqs", "outs", "t_launch")
+
+    def __init__(
+        self, reqs: List[_Request], outs: List[Tuple[Any, int]], t_launch: float
+    ):
+        self.reqs = reqs
+        self.outs = outs
+        self.t_launch = t_launch
+
+
 class BNNServer:
     """Serving front door over a compiled BNN (see module docstring).
 
     compiled: the CompiledBNN to serve; params: its bound parameter
     tree (replicated onto ``mesh`` at construction); max_batch: bucket
     ceiling, rounded up to a power of two; mesh: a jax Mesh with a
-    "data" axis for data-parallel dispatch, or None for single-device.
+    "data" axis for data-parallel dispatch, or None for single-device;
+    donate: donate the per-dispatch input buffer to XLA (safe — the
+    server never donates caller-held arrays); dispatch_ahead: max
+    launched-but-unresolved batches the dispatcher may run ahead of the
+    completer; admit_window_s: how long a partial batch may be held
+    open for late-arriving rows WHILE the device is busy (a partial
+    batch launches immediately when the device is idle); prewarm:
+    resolve the autotune keys for every (bucket, valid) dispatch level
+    at construction instead of on first touch.
     """
 
-    def __init__(self, compiled, params, max_batch: int = 32, mesh=None):
+    def __init__(
+        self,
+        compiled,
+        params,
+        max_batch: int = 32,
+        mesh=None,
+        donate: bool = True,
+        dispatch_ahead: int = 2,
+        admit_window_s: float = 0.002,
+        prewarm: bool = False,
+    ):
+        if dispatch_ahead < 1:
+            raise ValueError(f"dispatch_ahead must be >= 1, got {dispatch_ahead}")
         self.compiled = compiled
         self.mesh = mesh
         self.max_batch = pow2_ceil(max_batch)
+        self.donate = donate
+        self.dispatch_ahead = dispatch_ahead
+        self.admit_window_s = admit_window_s
         self.params = replicate(params, mesh)
-        self._apply_jit = jax.jit(compiled.apply)
+        if donate:
+            _filter_donation_warning()
+        self._apply_jit = jax.jit(
+            compiled.apply,
+            **compiled.serving_jit_kwargs(donate),
+        )
         self._traced: set = set()
         self._queue: deque = deque()
         self._qlock = threading.Lock()
@@ -135,7 +229,11 @@ class BNNServer:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
+        self._completer: Optional[threading.Thread] = None
+        self._launched: Queue = Queue()
+        self._ahead_sem = threading.Semaphore(dispatch_ahead)
         self._latencies: deque = deque(maxlen=2048)
+        self._queue_waits: deque = deque(maxlen=2048)
         self._traffic_cache: Dict[int, int] = {}
         self._n_requests = 0
         self._n_rows = 0
@@ -143,50 +241,73 @@ class BNNServer:
         self._bucket_hits = 0
         self._bucket_misses = 0
         self._padded_rows = 0
+        self._valid_rows = 0
         self._real_rows = 0
         self._hbm_bytes = 0
+        self._inflight_n = 0
+        self._inflight_peak = 0
+        if prewarm:
+            levels = sorted({v for _, v in dispatch_grid(self.max_batch)})
+            autotune.warm(compiled.tuning_keys_for_batches(levels))
 
-    # -- the bucketed, sharded dispatch core ------------------------- #
+    # -- the bucketed, masked, sharded dispatch core ----------------- #
     def trace_bound(self) -> int:
-        """Max jit traces this server can ever take per input kind."""
-        return trace_bound(self.max_batch)
+        """Max jit traces this server can ever take per input kind:
+        one per (bucket, ragged-valid) level."""
+        return trace_bound(self.max_batch, ragged=True)
 
     def jit_traces(self) -> int:
         """Ground-truth trace count of the single jitted apply (falls
-        back to the server's own bucket bookkeeping off-jax)."""
+        back to the server's own bookkeeping off-jax)."""
         cache_size = getattr(self._apply_jit, "_cache_size", None)
         if cache_size is not None:
             return int(cache_size())
         return len(self._traced)
 
-    def _warm_bucket(self, bucket: int) -> None:
-        """First touch of a bucket: prefetch every launch's autotune
-        key at this batch size — same plan, M rescaled (no recompile)."""
-        autotune.warm(self.compiled.tuning_keys_for_batch(bucket))
+    def _warm(self, valid: int) -> None:
+        """First touch of a (bucket, valid) level: prefetch every
+        launch's autotune key at the masked row count — same plan, M
+        rescaled (no recompile of the plan)."""
+        autotune.warm(self.compiled.tuning_keys_for_batch(valid))
 
-    def _run(self, x: Any, bucket: int) -> Any:
-        xs = shard_batch(_pad_rows(x, bucket), self.mesh)
-        return jax.block_until_ready(self._apply_jit(self.params, xs))
+    def _inflight(self) -> int:
+        with self._stats_lock:
+            return self._inflight_n
 
-    def _dispatch(self, x: Any, rows: int) -> Any:
-        """Pad one micro-batch to its bucket, run the bucketed jit on
-        the (optionally sharded) inputs, slice the real rows back out.
+    def _run(self, x: Any, bucket: int, valid: int, owned: bool) -> Any:
+        """Pad to the bucket, place on the mesh, and ENQUEUE the masked
+        forward — asynchronous: the caller decides when (and on which
+        thread) to block.  The donated input slot only ever sees a
+        server-owned buffer: padding and placement create fresh ones,
+        and the one aliasing case (exact-bucket rows arriving in a
+        caller-held array) is defensively copied."""
+        xp = _pad_rows(x, bucket)
+        if self.donate and xp is x and not owned:
+            xp = ensure_owned(xp)
+        xs = shard_batch(xp, self.mesh)
+        return self._apply_jit(self.params, xs, valid_rows=valid)
 
-        Only a bucket's FIRST dispatch holds the trace lock across the
-        forward (so concurrent first touches cannot double-trace and
-        the per-bucket trace bound holds); warm buckets run lock-free
-        — jax dispatch is thread-safe — so one slow batch never
-        head-of-line blocks unrelated callers."""
+    def _launch(self, x: Any, rows: int, owned: bool) -> Any:
+        """Async-dispatch one micro-batch at its (bucket, valid) level;
+        returns the UNRESOLVED output (``valid`` >= ``rows`` rows).
+
+        Only a level's FIRST dispatch holds the trace lock across the
+        jit call (tracing happens inside the call, so concurrent first
+        touches cannot double-trace and the per-level bound holds);
+        warm levels dispatch lock-free — jax dispatch is thread-safe —
+        so one slow batch never head-of-line blocks unrelated
+        callers."""
         bucket = bucket_for(rows, self.max_batch)
-        key = (bucket, _kind_of(x))
+        valid = ragged_valid(rows, bucket)
+        key = (bucket, valid, _kind_of(x))
         with self._trace_lock:
             hit = key in self._traced
             if not hit:
-                self._warm_bucket(bucket)
-                out = self._run(x, bucket)
+                self._warm(valid)
+                out = self._run(x, bucket, valid, owned)
                 self._traced.add(key)
         if hit:
-            out = self._run(x, bucket)
+            out = self._run(x, bucket, valid, owned)
         with self._stats_lock:
             if hit:
                 self._bucket_hits += 1
@@ -194,40 +315,61 @@ class BNNServer:
                 self._bucket_misses += 1
             self._n_batches += 1
             self._padded_rows += bucket
+            self._valid_rows += valid
             self._real_rows += rows
-            self._hbm_bytes += self._bucket_traffic(bucket)
-        return _slice_rows(out, 0, rows)
+            self._hbm_bytes += self._level_traffic(valid)
+        return out
 
-    def _bucket_traffic(self, bucket: int) -> int:
-        b = self._traffic_cache.get(bucket)
+    def _launch_chunks(self, x: Any, rows: int, multi: bool) -> List[Tuple[Any, int]]:
+        """Async-launch a payload as max_batch chunks + remainder;
+        returns [(unresolved out, chunk rows)].  ``multi``: the payload
+        was coalesced from several requests (already server-owned)."""
+        outs: List[Tuple[Any, int]] = []
+        chunks = split_rows(rows, self.max_batch)
+        off = 0
+        for chunk in chunks:
+            piece = x if len(chunks) == 1 else _slice_rows(x, off, off + chunk)
+            owned = multi or len(chunks) > 1
+            outs.append((self._launch(piece, chunk, owned), chunk))
+            off += chunk
+        return outs
+
+    def _finish_chunks(self, outs: List[Tuple[Any, int]]) -> Any:
+        """Resolve launched chunks (block_until_ready) and reassemble
+        the true-row-count result."""
+        parts = []
+        for out, chunk in outs:
+            jax.block_until_ready(out)
+            parts.append(_slice_rows(out, 0, chunk))
+        return parts[0] if len(parts) == 1 else _concat_rows(parts)
+
+    def _level_traffic(self, valid: int) -> int:
+        b = self._traffic_cache.get(valid)
         if b is None:
-            b = int(self.compiled.traffic(batch=bucket)["packed_bytes"])
-            self._traffic_cache[bucket] = b
+            b = int(self.compiled.traffic(batch=valid)["packed_bytes"])
+            self._traffic_cache[valid] = b
         return b
 
     def apply_batch(self, x: Any) -> Any:
-        """Synchronous bucketed+sharded forward of one request batch
-        (chunked through ``max_batch`` when larger); bit-identical to
-        ``compiled.apply(params, x)``."""
+        """Synchronous bucketed+masked+sharded forward of one request
+        batch (chunked through ``max_batch`` when larger);
+        bit-identical to ``compiled.apply(params, x)``."""
         rows = _rows_of(x)
         t0 = time.perf_counter()
-        outs, off = [], 0
-        for chunk in split_rows(rows, self.max_batch):
-            outs.append(self._dispatch(_slice_rows(x, off, off + chunk), chunk))
-            off += chunk
+        out = self._finish_chunks(self._launch_chunks(x, rows, multi=False))
         with self._stats_lock:
             self._n_requests += 1
             self._n_rows += rows
             self._latencies.append(time.perf_counter() - t0)
-        return outs[0] if len(outs) == 1 else _concat_rows(outs)
+        return out
 
-    # -- the micro-batch request queue ------------------------------- #
+    # -- the continuous-batching request queue ----------------------- #
     def submit(self, x: Any) -> Future:
         """Enqueue one request batch; the returned future resolves to
-        the sliced result once a micro-batch containing it runs.  The
-        row count and kind signature are computed HERE so a payload the
-        server cannot even inspect fails fast in the caller, never in
-        the worker loop."""
+        the sliced result once a micro-batch containing it completes.
+        The row count and kind signature are computed HERE so a payload
+        the server cannot even inspect fails fast in the caller, never
+        in the worker loop."""
         req = _Request(x, _rows_of(x), _kind_of(x), Future(), time.perf_counter())
         with self._qlock:
             self._queue.append(req)
@@ -241,11 +383,10 @@ class BNNServer:
     def _take_microbatch(self) -> List[_Request]:
         """Pop a FIFO run of requests whose rows coalesce under
         ``max_batch`` (an oversized head request comes back alone and
-        is chunked by ``apply_batch`` semantics in ``_serve_one``).
-        Only same-kind payloads coalesce: a request whose trailing
-        shape/dtype differs from the head's starts its own micro-batch,
-        so one malformed request can never fail its neighbors'
-        futures."""
+        is chunked by ``_launch_chunks``).  Only same-kind payloads
+        coalesce: a request whose trailing shape/dtype differs from the
+        head's starts its own micro-batch, so one malformed request can
+        never fail its neighbors' futures."""
         taken: List[_Request] = []
         total = 0
         kind = None
@@ -264,20 +405,106 @@ class BNNServer:
                     break
         return taken
 
-    def _serve_one(self, taken: List[_Request]) -> None:
-        """Run one coalesced micro-batch and resolve its futures."""
+    def _admit(self) -> List[_Request]:
+        """Continuous-batching admission: build the next micro-batch,
+        holding it open (the admission window) so rows arriving while
+        the device is busy join the not-yet-launched batch instead of
+        starting their own.  The window is keyed on queue state and
+        never delays latency-bound traffic — a partial batch launches
+        IMMEDIATELY when
+
+        * it is full (``max_batch`` rows), or
+        * other requests are already queued behind it (backlog: a
+          different-kind head, or rows that did not fit), or
+        * no batch is in flight (the device is idle — holding the
+          batch would serialize, not overlap).
+
+        Only while at least one batch is in flight does the batch stay
+        open, for at most ``admit_window_s`` — time that is fully
+        overlapped with device compute."""
+        taken: List[_Request] = []
+        total = 0
+        kind = None
+        deadline: Optional[float] = None
+        while not self._stop.is_set():
+            with self._qlock:
+                while self._queue:
+                    nxt = self._queue[0]
+                    if taken and total + nxt.rows > self.max_batch:
+                        break
+                    if taken and nxt.kind != kind:
+                        break
+                    if not taken:
+                        kind = nxt.kind
+                    taken.append(self._queue.popleft())
+                    total += nxt.rows
+                    if total >= self.max_batch:
+                        break
+                backlog = bool(self._queue)
+            if taken and (total >= self.max_batch or backlog):
+                break
+            if taken:
+                if self._inflight() == 0:
+                    break
+                now = time.perf_counter()
+                if deadline is None:
+                    deadline = now + self.admit_window_s
+                if now >= deadline:
+                    break
+                timeout = min(deadline - now, 0.0005)
+            else:
+                timeout = 0.05
+            self._wake.wait(timeout=timeout)
+            self._wake.clear()
+        return taken
+
+    def _launch_flight(self, taken: List[_Request]) -> None:
+        """Coalesce one admitted micro-batch and ENQUEUE its device
+        computation without waiting (dispatch-ahead): the completer
+        thread blocks on results in launch order while this thread
+        returns to admission for the next batch.  The dispatch-ahead
+        semaphore bounds launched-but-unresolved flights."""
+        acquired = False
         try:
             x = _concat_rows([r.x for r in taken])
             rows = sum(r.rows for r in taken)
-            outs, off = [], 0
-            for chunk in split_rows(rows, self.max_batch):
-                outs.append(self._dispatch(_slice_rows(x, off, off + chunk), chunk))
-                off += chunk
-            out = outs[0] if len(outs) == 1 else _concat_rows(outs)
+            self._ahead_sem.acquire()
+            acquired = True
+            t_launch = time.perf_counter()
+            outs = self._launch_chunks(x, rows, multi=len(taken) > 1)
+        except Exception as e:
+            if acquired:
+                self._ahead_sem.release()
+            for r in taken:
+                r.future.set_exception(e)
+            return
+        with self._stats_lock:
+            self._inflight_n += 1
+            self._inflight_peak = max(self._inflight_peak, self._inflight_n)
+            for r in taken:
+                self._queue_waits.append(t_launch - r.t_enqueue)
+        self._launched.put(_Flight(taken, outs, t_launch))
+
+    def _serve_one(self, taken: List[_Request]) -> None:
+        """Run one coalesced micro-batch synchronously and resolve its
+        futures (the ``flush`` path — no dispatch-ahead)."""
+        t_start = time.perf_counter()
+        with self._stats_lock:
+            for r in taken:
+                self._queue_waits.append(t_start - r.t_enqueue)
+        try:
+            x = _concat_rows([r.x for r in taken])
+            rows = sum(r.rows for r in taken)
+            outs = self._launch_chunks(x, rows, multi=len(taken) > 1)
+            out = self._finish_chunks(outs)
         except Exception as e:
             for r in taken:
                 r.future.set_exception(e)
             return
+        self._resolve(taken, out)
+
+    def _resolve(self, taken: List[_Request], out: Any) -> None:
+        """Slice a completed micro-batch result back to its requests."""
         t_done = time.perf_counter()
         off = 0
         for r in taken:
@@ -298,59 +525,99 @@ class BNNServer:
             self._serve_one(taken)
             n += 1
 
-    # -- async worker ------------------------------------------------- #
+    # -- async dispatcher + completer -------------------------------- #
     def start(self) -> "BNNServer":
-        """Spawn the background dispatch thread (idempotent)."""
+        """Spawn the dispatcher and completer threads (idempotent)."""
         if self._worker is not None and self._worker.is_alive():
             return self
         self._stop.clear()
-        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._launched = Queue()
+        self._completer = threading.Thread(target=self._complete_loop, daemon=True)
+        self._worker = threading.Thread(target=self._dispatch_loop, daemon=True)
+        self._completer.start()
         self._worker.start()
         return self
 
-    def _loop(self) -> None:
+    def _dispatch_loop(self) -> None:
         while not self._stop.is_set():
-            self._wake.wait(timeout=0.05)
-            self._wake.clear()
             try:
-                self.flush()
+                taken = self._admit()
+                if taken:
+                    self._launch_flight(taken)
             except Exception:
                 # per-request failures already resolve their own
-                # futures inside _serve_one; anything that still
-                # escapes must not kill the worker and strand the queue
+                # futures inside _launch_flight; anything that still
+                # escapes must not kill the dispatcher and strand the
+                # queue
                 continue
-        self.flush()
+        # shutdown drain: launch everything still queued (no admission
+        # window), then hand the completer its stop sentinel — batches
+        # in flight resolve before stop() returns
+        while True:
+            taken = self._take_microbatch()
+            if not taken:
+                break
+            self._launch_flight(taken)
+        self._launched.put(None)
+
+    def _complete_loop(self) -> None:
+        while True:
+            fl = self._launched.get()
+            if fl is None:
+                return
+            try:
+                out = self._finish_chunks(fl.outs)
+            except Exception as e:
+                for r in fl.reqs:
+                    r.future.set_exception(e)
+            else:
+                self._resolve(fl.reqs, out)
+            finally:
+                with self._stats_lock:
+                    self._inflight_n -= 1
+                self._ahead_sem.release()
 
     def stop(self) -> None:
-        """Stop the worker after draining what is already queued."""
+        """Stop the worker threads after draining what is already
+        queued; every launched batch resolves before this returns."""
         if self._worker is None:
             return
         self._stop.set()
         self._wake.set()
         self._worker.join()
+        if self._completer is not None:
+            self._completer.join()
         self._worker = None
+        self._completer = None
+        self.flush()  # anything submitted after the drain began
 
-    # -- observability ------------------------------------------------ #
+    # -- observability ----------------------------------------------- #
     def stats(self) -> Dict[str, Any]:
-        """The serving counters (DESIGN.md §9 schema): request/row
+        """The serving counters (DESIGN.md §9/§10 schema): request/row
         totals, dispatch and bucket-reuse counts, jit trace count vs
-        the policy bound, padded-vs-real occupancy, HBM bytes/request
-        from the compiled traffic model, and latency aggregates."""
+        the policy bound, padded-vs-valid-vs-real occupancy, HBM
+        bytes/request from the compiled traffic model, the in-flight
+        gauge, and queue-wait / end-to-end latency percentiles."""
         with self._stats_lock:  # snapshot: writers hold the same locks
             lat = sorted(self._latencies)
+            waits = sorted(self._queue_waits)
             requests, rows = self._n_requests, self._n_rows
             batches = self._n_batches
             hits, misses = self._bucket_hits, self._bucket_misses
-            padded, real = self._padded_rows, self._real_rows
+            padded, valid = self._padded_rows, self._valid_rows
+            real = self._real_rows
             hbm = self._hbm_bytes
+            inflight, inflight_peak = self._inflight_n, self._inflight_peak
         with self._trace_lock:
-            buckets = sorted({b for b, _ in self._traced})
+            buckets = sorted({b for b, _, _ in self._traced})
         dispatches = hits + misses
         stats = {
             "requests": requests,
             "rows": rows,
             "batches": batches,
             "queue_depth": self.queue_depth(),
+            "inflight_batches": inflight,
+            "inflight_peak": inflight_peak,
             "buckets_traced": buckets,
             "bucket_hits": hits,
             "bucket_misses": misses,
@@ -358,16 +625,16 @@ class BNNServer:
             "jit_traces": self.jit_traces(),
             "trace_bound": self.trace_bound(),
             "padded_rows": padded,
+            "valid_rows": valid,
             "real_rows": real,
             "occupancy": real / padded if padded else 0.0,
+            "compute_occupancy": real / valid if valid else 0.0,
             "hbm_bytes": hbm,
             "hbm_bytes_per_request": hbm / max(requests, 1),
             "devices": 1 if self.mesh is None else self.mesh.size,
         }
         if lat:
-            stats["latency_s"] = {
-                "mean": float(np.mean(lat)),
-                "p50": float(lat[len(lat) // 2]),
-                "max": float(lat[-1]),
-            }
+            stats["latency_s"] = _pcts(lat)
+        if waits:
+            stats["queue_wait_s"] = _pcts(waits)
         return stats

@@ -1,11 +1,16 @@
-"""The serving engine: bucketing policy, trace bounds, the micro-batch
-queue, and sharded-vs-single-device bit-identity (DESIGN.md §9).
+"""The serving engine: bucketing + ragged-mask policy, trace bounds,
+the continuously-batched queue (admission window, dispatch-ahead,
+donation safety), and sharded-vs-single-device bit-identity
+(DESIGN.md §9/§10).
 
 Whole-net dispatch runs on backend="xla" (interpret mode is far too
 slow for full networks — see tests/test_graph.py); the mesh tests need
 the 4 virtual CPU devices conftest.py forces, and skip on hosts where
 the flag could not land.
 """
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,8 +19,10 @@ import pytest
 from repro import graph
 from repro.kernels.autotune import get_table
 from repro.kernels.ops import binarize_pack
-from repro.serving import (BNNServer, bucket_for, bucket_sizes, data_mesh,
-                           pow2_ceil, split_rows, trace_bound)
+from repro.serving import (BNNServer, bucket_for, bucket_sizes,
+                           data_mesh, dispatch_grid, ensure_owned,
+                           mask_levels, mask_step, pow2_ceil,
+                           ragged_valid, split_rows, trace_bound)
 
 MULTIDEV = len(jax.devices()) >= 4
 needs_mesh = pytest.mark.skipif(
@@ -23,12 +30,12 @@ needs_mesh = pytest.mark.skipif(
 
 
 def _mlp_server(max_batch=8, mesh=None, d0=256, hidden=(128, 64),
-                batch=4):
+                batch=4, **kw):
     spec = graph.from_dense_stack(d0, list(hidden), name="srv_mlp")
     cb = graph.compile(spec, backend="xla", batch=batch)
     params = cb.init(jax.random.PRNGKey(0))
     return cb, params, BNNServer(cb, params, max_batch=max_batch,
-                                 mesh=mesh)
+                                 mesh=mesh, **kw)
 
 
 def _packed(rng, rows, d0=256):
@@ -37,7 +44,7 @@ def _packed(rng, rows, d0=256):
 
 
 # ------------------------------------------------------------------ #
-# bucketing policy                                                     #
+# bucketing + ragged-mask policy                                       #
 # ------------------------------------------------------------------ #
 def test_bucket_edges():
     assert bucket_for(1, 32) == 1                   # batch of one
@@ -59,12 +66,61 @@ def test_bucket_sizes_and_trace_bound():
         bucket_sizes(12)
 
 
+def test_ragged_valid_levels():
+    # eighth-bucket rounding: small buckets mask at row granularity,
+    # big buckets at bucket//8 — <= 4 mask levels per bucket
+    assert mask_step(8) == 1 and mask_step(64) == 8
+    assert ragged_valid(3, 4) == 3
+    assert ragged_valid(33, 64) == 40               # not 64
+    assert ragged_valid(64, 64) == 64
+    assert mask_levels(8) == (5, 6, 7, 8)
+    assert mask_levels(64) == (40, 48, 56, 64)
+    # a bucket only ever sees rows in (bucket/2, bucket]
+    assert all(b // 2 < v <= b for b, v in dispatch_grid(64))
+    assert trace_bound(8, ragged=True) == 8         # 1 + 1 + 2 + 4
+    assert trace_bound(64, ragged=True) == len(dispatch_grid(64)) == 20
+    with pytest.raises(ValueError):
+        ragged_valid(0, 4)
+    with pytest.raises(ValueError):
+        ragged_valid(5, 4)
+
+
 def test_split_rows_oversized():
     assert split_rows(70, 32) == [32, 32, 6]
     assert split_rows(32, 32) == [32]
     assert split_rows(3, 32) == [3]
     with pytest.raises(ValueError):
         split_rows(0, 32)
+
+
+# ------------------------------------------------------------------ #
+# ragged masking: bit-identity of the masked forward                   #
+# ------------------------------------------------------------------ #
+def test_masked_apply_bit_identical_on_valid_rows():
+    """apply(params, x, valid_rows=r) == apply(params, x)[:r] exactly —
+    the masked launch computes the SAME bits on valid rows and simply
+    never touches the dead ones."""
+    spec = graph.from_dense_stack(256, [128, 64], name="mask_mlp")
+    cb = graph.compile(spec, backend="xla", batch=8)
+    params = cb.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(9)
+    xp = _packed(rng, 8)
+    full = cb.apply(params, xp)
+    for r in (1, 3, 5, 8):
+        got = cb.apply(params, xp, valid_rows=r)
+        np.testing.assert_array_equal(np.asarray(got.words),
+                                      np.asarray(full.words)[:r])
+
+
+def test_masked_apply_conv_logits_bit_identical():
+    from repro.core.workloads import binarynet_cifar10
+    cb = graph.compile(binarynet_cifar10(), backend="xla", batch=4)
+    params = cb.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 32, 32, 3),
+                          jnp.float32)
+    ref = np.asarray(cb.apply(params, x))
+    got = np.asarray(cb.apply(params, x, valid_rows=3))
+    np.testing.assert_array_equal(got, ref[:3])
 
 
 # ------------------------------------------------------------------ #
@@ -82,7 +138,7 @@ def test_ragged_batches_bit_identical_to_direct_apply():
                                       np.asarray(ref.words))
 
 
-def test_trace_count_bounded_by_buckets():
+def test_trace_count_bounded_by_dispatch_grid():
     cb, params, srv = _mlp_server(max_batch=8)
     rng = np.random.default_rng(1)
     for rows in (1, 2, 3, 4, 5, 6, 7, 8, 1, 5, 8):
@@ -90,7 +146,8 @@ def test_trace_count_bounded_by_buckets():
     st = srv.stats()
     assert st["buckets_traced"] == [1, 2, 4, 8]
     # ground truth from the jit cache itself, not just our bookkeeping
-    assert srv.jit_traces() <= srv.trace_bound() == trace_bound(8)
+    assert srv.jit_traces() <= srv.trace_bound() == trace_bound(
+        8, ragged=True)
     # re-dispatching every size again adds no traces, only hits
     before = srv.jit_traces()
     for rows in (1, 2, 3, 4, 5, 6, 7, 8):
@@ -109,17 +166,20 @@ def test_oversized_request_chunks_through_max_batch():
                                   np.asarray(ref.words))
     st = srv.stats()
     assert st["batches"] == 3 and st["rows"] == 11
-    assert srv.jit_traces() <= trace_bound(4)
+    assert srv.jit_traces() <= trace_bound(4, ragged=True)
 
 
 def test_stats_occupancy_and_traffic_accounting():
     cb, params, srv = _mlp_server(max_batch=8)
     rng = np.random.default_rng(3)
-    srv.apply_batch(_packed(rng, 3))                # bucket 4
+    srv.apply_batch(_packed(rng, 3))                # bucket 4, valid 3
     st = srv.stats()
     assert st["padded_rows"] == 4 and st["real_rows"] == 3
+    assert st["valid_rows"] == 3                    # masked launch size
     assert st["occupancy"] == pytest.approx(0.75)
-    assert st["hbm_bytes"] == cb.traffic(batch=4)["packed_bytes"]
+    assert st["compute_occupancy"] == pytest.approx(1.0)
+    # HBM is charged at the MASKED row count, not the bucket
+    assert st["hbm_bytes"] == cb.traffic(batch=3)["packed_bytes"]
     assert st["hbm_bytes_per_request"] == st["hbm_bytes"]
     assert st["latency_s"]["max"] > 0
 
@@ -127,9 +187,16 @@ def test_stats_occupancy_and_traffic_accounting():
 def test_bucket_warm_prefetches_tuning_keys():
     cb, params, srv = _mlp_server(max_batch=8)
     rng = np.random.default_rng(4)
-    srv.apply_batch(_packed(rng, 5))                # bucket 8
-    for key in cb.tuning_keys_for_batch(8):
+    srv.apply_batch(_packed(rng, 5))                # bucket 8, valid 5
+    for key in cb.tuning_keys_for_batch(5):
         assert get_table().get(key) is not None
+
+
+def test_prewarm_resolves_all_dispatch_levels():
+    cb, params, srv = _mlp_server(max_batch=8, prewarm=True)
+    for _, valid in dispatch_grid(8):
+        for key in cb.tuning_keys_for_batch(valid):
+            assert get_table().get(key) is not None
 
 
 # ------------------------------------------------------------------ #
@@ -156,8 +223,45 @@ def test_tuning_keys_for_batch_conv_spec():
         assert cb.tuning_keys_for_batch(b) == fresh
 
 
+def test_tuning_keys_for_batches_dedups():
+    spec = graph.from_dense_stack(256, [128, 64], name="tkb")
+    cb = graph.compile(spec, backend="xla", batch=8)
+    keys = cb.tuning_keys_for_batches((4, 8, 8, 4))
+    assert len(keys) == len(set(keys))
+    want = set(cb.tuning_keys_for_batch(4)) | set(
+        cb.tuning_keys_for_batch(8))
+    assert set(keys) == want
+
+
 # ------------------------------------------------------------------ #
-# the micro-batch queue                                                #
+# buffer donation never bites the caller                               #
+# ------------------------------------------------------------------ #
+def test_donation_never_invalidates_caller_buffer():
+    """An exact-bucket request is the one case where the caller's own
+    array would reach the donated jit slot; the server must copy it
+    first (placement.ensure_owned), so the caller's PackedArray stays
+    alive, unchanged, and reusable."""
+    cb, params, srv = _mlp_server(max_batch=8)      # donate=True default
+    rng = np.random.default_rng(10)
+    xp = _packed(rng, 8)                            # rows == bucket
+    before = np.asarray(xp.words).copy()
+    ref = cb.apply(params, xp)
+    srv.apply_batch(xp)
+    np.testing.assert_array_equal(np.asarray(xp.words), before)
+    got = srv.apply_batch(xp)                       # reuse is safe too
+    np.testing.assert_array_equal(np.asarray(got.words),
+                                  np.asarray(ref.words))
+
+
+def test_ensure_owned_copies_every_leaf():
+    x = jnp.arange(8, dtype=jnp.uint32)
+    cp = ensure_owned({"a": x})
+    assert cp["a"] is not x
+    np.testing.assert_array_equal(np.asarray(cp["a"]), np.asarray(x))
+
+
+# ------------------------------------------------------------------ #
+# the continuously-batched queue                                       #
 # ------------------------------------------------------------------ #
 def test_queue_drain_bursty_arrival():
     cb, params, srv = _mlp_server(max_batch=8)
@@ -178,6 +282,7 @@ def test_queue_drain_bursty_arrival():
     st = srv.stats()
     assert st["requests"] == len(sizes)
     assert st["latency_s"]["mean"] > 0
+    assert st["queue_wait_s"]["p50"] >= 0
 
 
 def test_mismatched_request_does_not_fail_neighbors():
@@ -198,6 +303,37 @@ def test_mismatched_request_does_not_fail_neighbors():
         fb.result(timeout=5)
 
 
+def test_admission_joins_open_batch_only_while_device_busy():
+    """The continuous-batching policy: a partial batch launches
+    immediately when nothing is in flight (waiting would serialize),
+    but while the device is busy the not-yet-launched batch stays open
+    and a late-arriving request joins it instead of starting fresh."""
+    cb, params, srv = _mlp_server(max_batch=8)
+    srv.admit_window_s = 0.5
+    rng = np.random.default_rng(11)
+    # device idle: partial batch comes back at once, window unpaid
+    srv.submit(_packed(rng, 2))
+    t0 = time.perf_counter()
+    taken = srv._admit()
+    assert len(taken) == 1 and taken[0].rows == 2
+    assert time.perf_counter() - t0 < 0.25
+    # device busy: a row submitted mid-window joins the open batch
+    srv._inflight_n = 1
+    try:
+        srv.submit(_packed(rng, 2))
+        late = threading.Thread(
+            target=lambda: (time.sleep(0.05),
+                            srv.submit(_packed(rng, 3))))
+        late.start()
+        taken = srv._admit()
+        late.join()
+    finally:
+        srv._inflight_n = 0
+    assert len(taken) == 2
+    assert sum(r.rows for r in taken) == 5
+    assert srv.queue_depth() == 0
+
+
 def test_worker_thread_async_dispatch():
     cb, params, srv = _mlp_server(max_batch=8)
     rng = np.random.default_rng(6)
@@ -215,6 +351,34 @@ def test_worker_thread_async_dispatch():
         srv.stop()
     assert srv.queue_depth() == 0
     assert srv.jit_traces() <= srv.trace_bound()
+
+
+def test_stop_resolves_batches_in_flight():
+    """stop() with work queued and batches in flight: every future
+    resolves before stop returns, the in-flight gauge drops to zero,
+    and the server restarts cleanly."""
+    cb, params, srv = _mlp_server(max_batch=4)
+    rng = np.random.default_rng(12)
+    xs = [_packed(rng, 3) for _ in range(6)]
+    refs = [cb.apply(params, x) for x in xs]
+    srv.start()
+    futs = [srv.submit(x) for x in xs]
+    srv.stop()
+    for fut, ref in zip(futs, refs):
+        assert fut.done()
+        np.testing.assert_array_equal(np.asarray(fut.result().words),
+                                      np.asarray(ref.words))
+    st = srv.stats()
+    assert st["inflight_batches"] == 0
+    assert st["inflight_peak"] >= 1
+    assert st["queue_depth"] == 0
+    assert {"p50", "p95", "p99"} <= set(st["latency_s"])
+    assert {"p50", "p95", "p99"} <= set(st["queue_wait_s"])
+    srv.start()                                     # restart after stop
+    fut = srv.submit(xs[0])
+    np.testing.assert_array_equal(np.asarray(fut.result(timeout=60).words),
+                                  np.asarray(refs[0].words))
+    srv.stop()
 
 
 # ------------------------------------------------------------------ #
@@ -240,7 +404,7 @@ def test_sharded_packed_words_bit_identical():
 def test_sharded_binarynet_logits_bit_identical():
     """The acceptance gate: BinaryNet through a 4-virtual-device data
     mesh equals the single-device compiled apply EXACTLY, with the
-    trace count pinned to one per bucket."""
+    trace count pinned to one per (bucket, valid) level."""
     from repro.core.workloads import binarynet_cifar10
     cb = graph.compile(binarynet_cifar10(), backend="xla", batch=4)
     params = cb.init(jax.random.PRNGKey(0))

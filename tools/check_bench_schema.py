@@ -1,0 +1,165 @@
+#!/usr/bin/env python
+"""BENCH_*.json schema checker (the CI bench artifact gate).
+
+Every benchmark artifact must carry its provenance (``env`` block:
+jax version, backend, device kind/count) so a number is never compared
+against a run from a different runtime.  Serve artifacts
+(BENCH_serve*.json) additionally carry the ISSUE 6 serving schema —
+throughput, device scaling, the continuous-batching stream, and the
+ragged-padding table — which this tool validates structurally on every
+smoke run, so a refactor that silently drops a field (or stops
+measuring a claim) fails CI even when the bench itself ran green.
+
+``--gate`` additionally enforces the full-run perf acceptance criteria
+on a tracked (non-smoke) serve artifact:
+
+* ``scaling.speedup > 1`` — the whole-host mesh beats 1 device through
+  the production dispatch path;
+* ``overhead_vs_exact < 1.5`` on every ragged padding point — masked
+  bucket dispatch never pays 1.5x over a jit traced at exactly the
+  request's shape.
+
+Usage: python tools/check_bench_schema.py [--gate] FILE [FILE ...]
+Exit status 1 with one line per violation, 0 when clean.
+Dependency-free on purpose: the docs/CI jobs run it without jax.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+ENV_KEYS = ("jax_version", "backend", "device_kind", "device_count")
+SERVE_TOP = ("env", "devices", "smoke", "model", "throughput",
+             "scaling", "stream", "padding", "server_stats",
+             "bit_identity")
+THROUGHPUT_KEYS = ("batch", "wall_s", "rows_per_s")
+SCALING_KEYS = ("batch", "devices_1_wall_s")
+SCALING_MESH_KEYS = ("devices_n", "devices_n_wall_s", "speedup")
+STREAM_KEYS = ("requests", "rows_each", "rows_total", "sync_wall_s",
+               "stream_wall_s", "pipeline_speedup", "rows_per_s_stream",
+               "dispatches_per_run", "inflight_peak")
+PADDING_KEYS = ("rows", "bucket", "valid", "wall_s",
+                "exact_jit_wall_s", "bucket_jit_wall_s", "occupancy",
+                "compute_occupancy", "overhead_vs_exact")
+
+
+def _missing(obj, keys, where):
+    return [f"{where}: missing key '{k}'" for k in keys if k not in obj]
+
+
+def _positive(obj, keys, where):
+    errs = []
+    for k in keys:
+        v = obj.get(k)
+        if isinstance(v, (int, float)) and k.endswith(
+                ("_s", "_per_s", "speedup")) and v <= 0:
+            errs.append(f"{where}: '{k}' must be > 0, got {v}")
+    return errs
+
+
+def check_env(doc, path):
+    errs = []
+    env = doc.get("env")
+    if not isinstance(env, dict):
+        return [f"{path}: missing 'env' provenance block"]
+    errs += _missing(env, ENV_KEYS, f"{path}: env")
+    if not isinstance(env.get("jax_version", ""), str) or \
+            not env.get("jax_version"):
+        errs.append(f"{path}: env.jax_version must be a non-empty string")
+    if not isinstance(env.get("device_count", 0), int) or \
+            env.get("device_count", 0) < 1:
+        errs.append(f"{path}: env.device_count must be a positive int")
+    return errs
+
+
+def check_serve(doc, path):
+    errs = _missing(doc, SERVE_TOP, path)
+    if errs:
+        return errs                      # later checks would just KeyError
+    thr = doc["throughput"]
+    if not isinstance(thr, list) or not thr:
+        errs.append(f"{path}: 'throughput' must be a non-empty list")
+    else:
+        for i, row in enumerate(thr):
+            errs += _missing(row, THROUGHPUT_KEYS, f"{path}: throughput[{i}]")
+            errs += _positive(row, THROUGHPUT_KEYS, f"{path}: throughput[{i}]")
+    sc = doc["scaling"]
+    errs += _missing(sc, SCALING_KEYS, f"{path}: scaling")
+    if doc["devices"] > 1:
+        errs += _missing(sc, SCALING_MESH_KEYS, f"{path}: scaling")
+    errs += _positive(sc, SCALING_KEYS + SCALING_MESH_KEYS,
+                      f"{path}: scaling")
+    errs += _missing(doc["stream"], STREAM_KEYS, f"{path}: stream")
+    errs += _positive(doc["stream"], STREAM_KEYS, f"{path}: stream")
+    pad = doc["padding"]
+    if not isinstance(pad, list) or not pad:
+        errs.append(f"{path}: 'padding' must be a non-empty list")
+    else:
+        for i, row in enumerate(pad):
+            errs += _missing(row, PADDING_KEYS, f"{path}: padding[{i}]")
+    if not isinstance(doc["server_stats"], dict):
+        errs.append(f"{path}: 'server_stats' must be an object")
+    return errs
+
+
+def gate_serve(doc, path):
+    """The full-run perf acceptance criteria (never applied to smoke
+    artifacts: smoke shapes only measure dispatch overhead)."""
+    errs = []
+    if doc.get("smoke"):
+        errs.append(f"{path}: --gate on a smoke artifact — the tracked "
+                    f"BENCH_serve.json must come from a full run")
+        return errs
+    speedup = doc.get("scaling", {}).get("speedup")
+    if speedup is None:
+        errs.append(f"{path}: no scaling.speedup (single-device run?)")
+    elif speedup <= 1.0:
+        errs.append(f"{path}: scaling.speedup = {speedup:.3f} — the mesh "
+                    f"must beat 1 device (> 1.0)")
+    for row in doc.get("padding", []):
+        ov = row.get("overhead_vs_exact")
+        if ov is None or ov >= 1.5:
+            errs.append(f"{path}: padding rows={row.get('rows')} "
+                        f"overhead_vs_exact = {ov} — must be < 1.5")
+    return errs
+
+
+def check_file(path, gate=False):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    errs = check_env(doc, path)
+    is_serve = "throughput" in doc or "scaling" in doc
+    if is_serve:
+        errs += check_serve(doc, path)
+        if gate and not errs:
+            errs += gate_serve(doc, path)
+    elif gate:
+        errs.append(f"{path}: --gate only applies to serve artifacts")
+    return errs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="validate BENCH_*.json artifact schemas")
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--gate", action="store_true",
+                    help="also enforce the full-run serve perf gates "
+                         "(speedup > 1, padding overhead < 1.5)")
+    args = ap.parse_args(argv)
+    errors = []
+    for path in args.files:
+        errors += check_file(path, gate=args.gate)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"bench schema OK ({len(args.files)} artifact(s)"
+              f"{', gates enforced' if args.gate else ''})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
