@@ -46,6 +46,7 @@ FUSED_OUT = os.path.join(_HERE, "BENCH_fused.json")
 CONV_OUT = os.path.join(_HERE, "BENCH_conv.json")
 COMPILE_OUT = os.path.join(_HERE, "BENCH_compile.json")
 SERVE_OUT = os.path.join(_HERE, "BENCH_serve.json")
+FAULTS_OUT = os.path.join(_HERE, "BENCH_faults.json")
 
 
 def model_bytes(m, k, n):
@@ -677,6 +678,178 @@ def run_serve(log=print, out_json=SERVE_OUT, smoke=False):
     return out
 
 
+def run_faults(log=print, out_json=FAULTS_OUT, smoke=False):
+    """Fault injection + chaos recovery (ISSUE 7 acceptance).
+
+    Two halves, mirroring src/repro/robustness/:
+      * data faults — seeded SEU bit flips into the packed weight
+        words and per-channel threshold perturbation (the analog-
+        margin noise of the mixed-signal threshold neuron), swept over
+        a Logits-terminated network to produce flips-vs-degradation
+        curves (full runs sweep BinaryNet CIFAR-10; smoke a small
+        conv+FC spec).  Gate: zero injection is bit-identical.
+      * system faults — a seeded ChaosMonkey driving BNNServer's
+        recovery ladder end to end.  Gates, raised on violation:
+        a poisoned request fails alone with PoisonRequest while its
+        coalesced neighbors resolve bit-identically; a backend-faulted
+        flight re-executes on the fallback backend bit-identically to
+        the healthy path; and under a storm of rate faults + latency
+        spikes + killed worker threads + an expired deadline, every
+        submitted future resolves (zero lost futures).
+    """
+    from repro import graph
+    from repro.core.workloads import binarynet_cifar10
+    from repro.robustness import (ChaosConfig, ChaosMonkey, seu_curve,
+                                  threshold_curve)
+    from repro.serving import BNNServer, PoisonRequest, RequestTimeout
+
+    log("\n== fault injection: SEU bit flips + threshold noise ==")
+    if smoke:
+        spec = graph.BNNSpec("faults_small", (8, 8, 32), (
+            graph.Binarize("b"),
+            graph.BinaryConv("c1", 3, 3, 32, 64, 8, 8, 8, 8, 1, 1),
+            graph.BNThreshold("c1.bn", 64),
+            graph.MaxPool("p1", 2, 2),
+            graph.BinaryDense("d1", 4 * 4 * 64, 64),
+            graph.BNThreshold("d1.bn", 64),
+            graph.BinaryDense("d2", 64, 16),
+            graph.Logits("logits", 16)))
+        model_name, rows_x = spec.name, 4
+        cb = graph.compile(spec, backend="xla", batch=rows_x)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (rows_x, 8, 8, 32), jnp.float32)
+        flip_counts = [0, 1, 4, 16, 64]
+        sigmas = [0.0, 1.0, 2.0]
+    else:
+        wl = binarynet_cifar10()
+        model_name, rows_x = wl.name, 8
+        cb = graph.compile(wl, backend="xla", batch=rows_x)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (rows_x, 32, 32, 3), jnp.float32)
+        flip_counts = [0, 1, 2, 4, 8, 16, 32, 64, 128]
+        sigmas = [0.0, 0.5, 1.0, 2.0, 4.0]
+    params = cb.init(jax.random.PRNGKey(0))
+    seu = seu_curve(cb, params, x, flip_counts, seed=0)
+    assert seu[0]["argmax_match"] == 1.0, "0-flip forward diverged"
+    assert seu[0]["max_abs_logit_delta"] == 0.0
+    for r in seu:
+        log(f"  SEU {r['n_flips']:>4d} flips | argmax match "
+            f"{r['argmax_match']:.2f} | mean |dlogit| "
+            f"{r['mean_abs_logit_delta']:.3f}")
+    thr = threshold_curve(cb, params, x, sigmas, seed=0)
+    assert thr[0]["argmax_match"] == 1.0, "sigma=0 forward diverged"
+    for r in thr:
+        log(f"  thr sigma {r['sigma']:4.1f} | argmax match "
+            f"{r['argmax_match']:.2f} | mean |dlogit| "
+            f"{r['mean_abs_logit_delta']:.3f}")
+
+    # -- chaos recovery through the server --------------------------- #
+    log("== chaos recovery gates (BNNServer ladder) ==")
+    mspec = graph.from_dense_stack(256, [128, 64], name="chaos_mlp")
+    mcb = graph.compile(mspec, backend="xla", batch=4)
+    mparams = mcb.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    def packed(rows):
+        xr = rng.standard_normal((rows, 256)).astype(np.float32)
+        return binarize_pack(jnp.asarray(xr), backend="xla")
+
+    # (a) poison isolation in one coalesced flight
+    chaos = ChaosMonkey()
+    srv = BNNServer(mcb, mparams, max_batch=8, chaos=chaos,
+                    retry_backoff_s=0.0)
+    good = [packed(2) for _ in range(3)]
+    bad = packed(2)
+    refs = [mcb.apply(mparams, g) for g in good]
+    chaos.poison(bad)
+    futs = [srv.submit(good[0]), srv.submit(bad), srv.submit(good[1]),
+            srv.submit(good[2])]
+    srv.flush()
+    poison_isolated = isinstance(futs[1].exception(), PoisonRequest)
+    assert poison_isolated, "poisoned request did not get PoisonRequest"
+    for f, ref in zip([futs[0], futs[2], futs[3]], refs):
+        np.testing.assert_array_equal(
+            np.array(f.result().words), np.array(ref.words),
+            err_msg="healthy neighbor diverged after bisection")
+    iso_stats = srv.stats()["faults"]
+    log(f"  poison isolated in {iso_stats['bisections']} bisections; "
+        f"neighbors bit-identical")
+
+    # (b) backend fallback bit-identity
+    from repro.serving.errors import BackendFault
+    chaos_fb = ChaosMonkey()
+    srv_fb = BNNServer(mcb, mparams, max_batch=8, chaos=chaos_fb,
+                       retry_backoff_s=0.0)
+    xq = packed(5)
+    ref = mcb.apply(mparams, xq)
+    chaos_fb.fail_next(BackendFault("injected kernel-launch failure"))
+    fut = srv_fb.submit(xq)
+    srv_fb.flush()
+    np.testing.assert_array_equal(
+        np.array(fut.result().words), np.array(ref.words),
+        err_msg="fallback path diverged from the healthy path")
+    fallback_identical = True
+    assert srv_fb.stats()["faults"]["backend_fallbacks"] == 1
+    log("  backend fallback bit-identical to the healthy path")
+
+    # (c) the storm: rate faults + latency spikes + thread kills +
+    #     an expired deadline, through the worker threads
+    n_req = 16 if smoke else 64
+    chaos_st = ChaosMonkey(ChaosConfig(
+        seed=2, fault_rate=0.3, latency_spike_rate=0.3,
+        latency_spike_s=0.002 if smoke else 0.01))
+    srv_st = BNNServer(mcb, mparams, max_batch=8, chaos=chaos_st,
+                       retry_backoff_s=0.001,
+                       supervise_interval_s=0.01).start()
+    chaos_st.kill("dispatcher")
+    chaos_st.kill("completer")
+    t0 = time.perf_counter()
+    futs = [srv_st.submit(packed(1 + i % 4)) for i in range(n_req)]
+    expired = srv_st.submit(packed(2), deadline_s=0.0)
+    for f in futs:
+        f.result(timeout=300)
+    srv_st.stop()
+    storm_wall = time.perf_counter() - t0
+    zero_lost = all(f.done() for f in futs) and expired.done()
+    assert zero_lost, "a submitted future never resolved"
+    assert isinstance(expired.exception(), RequestTimeout)
+    st = srv_st.stats()
+    sf = st["faults"]
+    assert sf["thread_restarts"] >= 2, "supervisor missed a dead loop"
+    log(f"  storm: {n_req} requests in {storm_wall:.2f}s | "
+        f"{sf['flights']} faulted flights, "
+        f"{sf['backend_fallbacks']} fallbacks, {sf['retries']} retries, "
+        f"{sf['thread_restarts']} thread restarts, "
+        f"{chaos_st.events['spikes']} spikes | zero lost futures")
+
+    chaos_row = {
+        "requests": n_req,
+        "zero_lost_futures": zero_lost,
+        "poison_isolated": poison_isolated,
+        "fallback_bit_identical": fallback_identical,
+        "flight_faults": sf["flights"],
+        "backend_fallbacks": sf["backend_fallbacks"],
+        "retries": sf["retries"],
+        "bisections": iso_stats["bisections"],
+        "poisoned_requests": iso_stats["poisoned_requests"],
+        "timeouts": sf["timeouts"],
+        "thread_restarts": sf["thread_restarts"],
+        "latency_spikes": chaos_st.events["spikes"],
+        "straggler_flags": len(st["straggler_flags"]),
+        "storm_wall_s": storm_wall,
+    }
+    out = {"env": _env(), "host_backend": jax.default_backend(),
+           "smoke": smoke,
+           "model": {"name": model_name, "rows": rows_x,
+                     "flip_counts": flip_counts, "sigmas": sigmas},
+           "seu": seu, "thresholds": thr, "chaos": chaos_row}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        log(f"wrote {out_json}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
@@ -698,9 +871,14 @@ if __name__ == "__main__":
                     help="benchmark BNNServer bucketed+sharded serving "
                          "on a 4-virtual-device CPU mesh (fails on "
                          "sharded-vs-single-device divergence)")
+    ap.add_argument("--faults", action="store_true",
+                    help="fault-injection curves (SEU bit flips, "
+                         "threshold noise) + chaos recovery gates "
+                         "(fails on poison leakage, fallback "
+                         "divergence, or any lost future)")
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes for CI (with "
-                         "--fused/--conv/--compile/--serve)")
+                         "--fused/--conv/--compile/--serve/--faults)")
     args = ap.parse_args()
 
     def dest_for(default):
@@ -721,5 +899,7 @@ if __name__ == "__main__":
         run_compile(out_json=dest_for(COMPILE_OUT), smoke=args.smoke)
     elif args.serve:
         run_serve(out_json=dest_for(SERVE_OUT), smoke=args.smoke)
+    elif args.faults:
+        run_faults(out_json=dest_for(FAULTS_OUT), smoke=args.smoke)
     else:
         run(out_json=dest_for(DEFAULT_OUT))

@@ -1,4 +1,5 @@
-from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
-                                           restore, save)
+from repro.checkpoint.checkpointer import (AsyncCheckpointer, ChecksumError,
+                                           latest_step, restore, save)
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]
+__all__ = ["AsyncCheckpointer", "ChecksumError", "latest_step", "restore",
+           "save"]

@@ -31,12 +31,32 @@ def _flatten(tree) -> Tuple[List[np.ndarray], Any, List[str]]:
     return arrs, treedef, names
 
 
+class ChecksumError(IOError):
+    """A checkpoint's on-disk bytes do not match the digest recorded
+    at save time — bit rot, a torn write, or tampering.  Typed so
+    restore callers can route corruption to a fallback step instead of
+    string-matching a generic IOError."""
+
+
 def _fingerprint(arrs: List[np.ndarray]) -> str:
     h = hashlib.sha256()
     for a in arrs:
         h.update(str(a.shape).encode())
         h.update(str(a.dtype).encode())
         h.update(a.tobytes()[:4096])   # prefix hash: cheap integrity check
+    return h.hexdigest()
+
+
+def _digest(arrs: List[np.ndarray]) -> str:
+    """Full sha256 over every leaf's shape, dtype, and ALL packed
+    bytes — unlike the prefix ``_fingerprint`` (kept for restore-time
+    cheap checks and old checkpoints), this catches a flipped byte
+    anywhere in the payload, e.g. deep inside a PackedArray's words."""
+    h = hashlib.sha256()
+    for a in arrs:
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
     return h.hexdigest()
 
 
@@ -57,6 +77,7 @@ def save(directory: str, step: int, tree: Any,
         "n_leaves": len(arrs),
         "treedef": str(treedef),
         "fingerprint": _fingerprint(arrs),
+        "sha256": _digest(arrs),
         "time": time.time(),
         "extra": extra or {},
     }
@@ -98,7 +119,13 @@ def restore(directory: str, template: Any, step: Optional[int] = None,
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrs = [z[f"leaf_{i}"] for i in range(meta["n_leaves"])]
     if _fingerprint(arrs) != meta["fingerprint"]:
-        raise IOError(f"checkpoint {path} failed integrity check")
+        raise ChecksumError(
+            f"checkpoint {path} failed the prefix fingerprint check")
+    want = meta.get("sha256")  # absent on pre-digest checkpoints
+    if want is not None and _digest(arrs) != want:
+        raise ChecksumError(
+            f"checkpoint {path} failed the full sha256 content digest "
+            f"— corrupted on disk")
     flat_t, treedef = jax.tree.flatten(template)
     assert len(flat_t) == len(arrs), \
         f"leaf count mismatch: {len(flat_t)} vs {len(arrs)}"

@@ -134,6 +134,19 @@ class CompiledBNN:
                                    backend=self.backend,
                                    vmem_budget=self.vmem_budget)
 
+    def with_backend(self, backend: Optional[str]) -> "CompiledBNN":
+        """Recompile this spec for a different execution backend —
+        same spec, same vmem budget, same batch hint, so the plan is
+        re-derived under the target backend's rules.  Every backend is
+        bit-identical on the same inputs (the registry contract), which
+        is what makes this the serving engine's graceful-degradation
+        hook: a pallas kernel-launch failure re-executes the flight on
+        the xla path with byte-for-byte identical results."""
+        if backend == self.backend:
+            return self
+        return compile(self.spec, backend=backend,
+                       vmem_budget=self.vmem_budget, batch=self.batch)
+
     def serving_jit_kwargs(self, donate: bool = True) -> dict:
         """The jit contract a serving engine wraps ``apply`` with —
         owned by the compiler so the server cannot drift from the

@@ -1,0 +1,46 @@
+"""Deterministic fault injection + chaos for the BNN stack (DESIGN.md §11).
+
+Two halves:
+
+* :mod:`repro.robustness.inject` — *data* faults: seeded single-event-
+  upset (SEU) bit flips into ``PackedArray`` words and per-channel
+  threshold perturbation (the mixed-signal neuron's analog-margin
+  noise), plus the sweep helpers that produce the degradation curves
+  in ``BENCH_faults.json``.
+* :mod:`repro.robustness.chaos` — *system* faults: a seeded
+  ``ChaosMonkey`` the server's flight path and worker loops call into
+  (injected flight exceptions, latency spikes, thread kills), driving
+  the recovery ladder end to end.
+
+This package imports from ``serving`` (never the reverse): the server
+takes its chaos hook duck-typed, so robustness stays an optional,
+cycle-free layer on top.
+"""
+
+from repro.robustness.chaos import (
+    ChaosConfig,
+    ChaosMonkey,
+    PoisonError,
+    ThreadKill,
+    TransientFault,
+)
+from repro.robustness.inject import (
+    flip_bits,
+    flip_params,
+    perturb_thresholds,
+    seu_curve,
+    threshold_curve,
+)
+
+__all__ = [
+    "ChaosConfig",
+    "ChaosMonkey",
+    "PoisonError",
+    "ThreadKill",
+    "TransientFault",
+    "flip_bits",
+    "flip_params",
+    "perturb_thresholds",
+    "seu_curve",
+    "threshold_curve",
+]

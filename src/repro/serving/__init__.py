@@ -1,12 +1,14 @@
-"""The serving subsystem: BNNServer over compile() (DESIGN.md §9/§10).
+"""The serving subsystem: BNNServer over compile() (DESIGN.md §9/§10/§11).
 
 ``graph.compile`` turns a spec into an executable; this package turns
 that executable into a *service* — pow2 batch bucketing with ragged
 row-validity masking and a bounded jit-trace set, data-parallel mesh
-sharding that stays bit-identical to single-device execution, and a
+sharding that stays bit-identical to single-device execution, a
 continuously-batched request queue (admission window + dispatch-ahead
 overlap, donated input buffers) with latency percentiles and a
-``stats()`` surface.
+``stats()`` surface, and a failure-handling contract (errors.py typed
+taxonomy; deadlines, bounded queue, poison-batch bisection, backend
+fallback, supervised worker loops, ``health()``).
 """
 
 from repro.serving.bucketing import (
@@ -20,6 +22,13 @@ from repro.serving.bucketing import (
     split_rows,
     trace_bound,
 )
+from repro.serving.errors import (
+    BackendFault,
+    PoisonRequest,
+    RequestTimeout,
+    ServerOverloaded,
+    ServingError,
+)
 from repro.serving.placement import (
     data_mesh,
     ensure_owned,
@@ -29,7 +38,12 @@ from repro.serving.placement import (
 from repro.serving.server import BNNServer
 
 __all__ = [
+    "BackendFault",
     "BNNServer",
+    "PoisonRequest",
+    "RequestTimeout",
+    "ServerOverloaded",
+    "ServingError",
     "bucket_for",
     "bucket_sizes",
     "data_mesh",

@@ -1,0 +1,378 @@
+"""Fault tolerance end to end (DESIGN.md §11): the typed error
+taxonomy, deadline shedding, bounded-queue backpressure, the recovery
+ladder (backend fallback -> bounded retry -> poison bisection),
+supervised worker threads + health(), the straggler watchdog wiring,
+deterministic SEU / threshold-noise injection, and checkpoint content
+digests.
+
+The headline invariant, asserted under injected flight faults, latency
+spikes, and killed worker threads: every submitted Future resolves
+with a value or a typed error, poison rows fail alone, and the
+fallback path's output is bit-identical to the healthy path.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import graph
+from repro.checkpoint import ChecksumError, restore, save
+from repro.kernels.ops import binarize_pack
+from repro.kernels.packed import PackedArray
+from repro.robustness import (ChaosConfig, ChaosMonkey, PoisonError,
+                              ThreadKill, TransientFault, flip_bits,
+                              flip_params, perturb_thresholds, seu_curve,
+                              threshold_curve)
+from repro.runtime.straggler import WatchdogConfig
+from repro.serving import (BackendFault, BNNServer, PoisonRequest,
+                           RequestTimeout, ServerOverloaded, ServingError)
+
+
+def _mlp_server(max_batch=8, d0=256, hidden=(128, 64), **kw):
+    spec = graph.from_dense_stack(d0, list(hidden), name="robust_mlp")
+    cb = graph.compile(spec, backend="xla", batch=4)
+    params = cb.init(jax.random.PRNGKey(0))
+    kw.setdefault("retry_backoff_s", 0.0)
+    return cb, params, BNNServer(cb, params, max_batch=max_batch, **kw)
+
+
+def _packed(rng, rows, d0=256):
+    x = jnp.asarray(rng.normal(size=(rows, d0)).astype(np.float32))
+    return binarize_pack(x, backend="xla")
+
+
+def _words(pa):
+    return np.array(pa.words)
+
+
+# ------------------------------------------------------------------ #
+# the typed taxonomy                                                   #
+# ------------------------------------------------------------------ #
+def test_error_taxonomy():
+    for err in (ServerOverloaded, RequestTimeout, PoisonRequest,
+                BackendFault):
+        assert issubclass(err, ServingError)
+    assert issubclass(RequestTimeout, TimeoutError)
+    assert issubclass(BackendFault, RuntimeError)
+    assert issubclass(ThreadKill, BaseException)
+    assert not issubclass(ThreadKill, Exception)    # unswallowable
+    assert issubclass(PoisonError, ValueError)      # skips retries
+    assert issubclass(TransientFault, RuntimeError)  # retryable
+
+
+def test_with_backend_recompiles_same_spec():
+    cb = graph.compile(graph.from_dense_stack(64, [32], name="wb"),
+                       backend="xla", batch=2)
+    assert cb.with_backend("xla") is cb             # no-op fast path
+    fb = cb.with_backend("interpret")
+    assert fb.backend == "interpret" and fb.spec is cb.spec
+    assert fb.batch == cb.batch
+
+
+# ------------------------------------------------------------------ #
+# deterministic data-fault injection                                   #
+# ------------------------------------------------------------------ #
+def test_flip_bits_deterministic_exact_and_pad_safe():
+    rng = np.random.default_rng(0)
+    pa = PackedArray.pack(jnp.asarray(
+        rng.standard_normal((4, 40)).astype(np.float32)))  # 24 pad bits/row
+    f1, f2 = flip_bits(pa, 10, seed=7), flip_bits(pa, 10, seed=7)
+    assert np.array_equal(_words(f1), _words(f2))   # seeded => identical
+    diff = np.array(f1.unpack(jnp.float32)) != np.array(pa.unpack(jnp.float32))
+    assert int(diff.sum()) == 10                    # exactly n logical flips
+    xor = _words(f1) ^ _words(pa)
+    assert int(np.unpackbits(xor.view(np.uint8)).sum()) == 10  # no pad flips
+    assert flip_bits(pa, 0, seed=7) is pa
+    # full flip: every logical bit, still zero pad bits touched
+    full = flip_bits(pa, 10**6, seed=1)
+    xor = _words(full) ^ _words(pa)
+    assert int(np.unpackbits(xor.view(np.uint8)).sum()) == 4 * 40
+
+
+def test_flip_params_targets_only_packed_leaves():
+    cb = graph.compile(graph.from_dense_stack(128, [64, 32], name="fp"),
+                       backend="xla", batch=2)
+    params = cb.init(jax.random.PRNGKey(1))
+    faulted = flip_params(params, 16, seed=3)
+    again = flip_params(params, 16, seed=3)
+    flips = 0
+    for a, b, c in zip(jax.tree_util.tree_leaves(params),
+                       jax.tree_util.tree_leaves(faulted),
+                       jax.tree_util.tree_leaves(again)):
+        assert np.array_equal(np.array(b), np.array(c))
+        if np.asarray(a).dtype == np.uint32:        # PackedArray words
+            xor = np.array(a) ^ np.array(b)
+            flips += int(np.unpackbits(xor.view(np.uint8)).sum())
+        else:                                       # thresholds untouched
+            assert np.array_equal(np.array(a), np.array(b))
+    assert flips == 16
+    with pytest.raises(ValueError, match="no PackedArray"):
+        flip_params({"t": np.ones(4, np.int32)}, 1)
+
+
+def test_perturb_thresholds_integer_noise_only_on_t():
+    params = {"fc": [{"wp": np.ones(3), "t": np.zeros(64, np.int32)},
+                     {"wp": np.ones(3), "t": np.zeros(64, np.int32)}]}
+    p1 = perturb_thresholds(params, 2.0, seed=0)
+    p2 = perturb_thresholds(params, 2.0, seed=0)
+    for layer, l1, l2 in zip(params["fc"], p1["fc"], p2["fc"]):
+        assert np.array_equal(np.array(l1["t"]), np.array(l2["t"]))
+        assert np.asarray(l1["t"]).dtype == np.int32
+        assert not np.array_equal(np.array(l1["t"]), layer["t"])
+        assert np.array_equal(l1["wp"], layer["wp"])
+    assert np.array_equal(
+        np.array(perturb_thresholds(params, 0.0)["fc"][0]["t"]),
+        params["fc"][0]["t"])
+
+
+def test_fault_curves_zero_injection_is_identity():
+    spec = graph.from_dense_stack(128, [64, 10], name="curve", logits=True)
+    cb = graph.compile(spec, backend="xla", batch=4)
+    params = cb.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    x = _packed(rng, 4, d0=128)
+    seu = seu_curve(cb, params, x, [0, 16], seed=0)
+    assert [r["n_flips"] for r in seu] == [0, 16]
+    assert seu[0]["argmax_match"] == 1.0
+    assert seu[0]["max_abs_logit_delta"] == 0.0
+    thr = threshold_curve(cb, params, x, [0.0, 2.0], seed=0)
+    assert thr[0]["argmax_match"] == 1.0 and thr[0]["sigma"] == 0.0
+    # packed (non-logits) outputs are rejected, not silently unpacked
+    cb2 = graph.compile(graph.from_dense_stack(128, [64], name="nc"),
+                        backend="xla", batch=4)
+    with pytest.raises(ValueError, match="float logits"):
+        seu_curve(cb2, cb2.init(jax.random.PRNGKey(0)), x, [0])
+
+
+# ------------------------------------------------------------------ #
+# deadlines + backpressure                                             #
+# ------------------------------------------------------------------ #
+def test_expired_deadline_sheds_before_launch():
+    rng = np.random.default_rng(3)
+    cb, params, srv = _mlp_server()
+    expired = srv.submit(_packed(rng, 2), deadline_s=0.0)
+    live = srv.submit(_packed(rng, 2), deadline_s=60.0)
+    srv.flush()
+    assert isinstance(expired.exception(), RequestTimeout)
+    assert live.result() is not None
+    st = srv.stats()
+    assert st["faults"]["timeouts"] == 1
+    assert st["requests"] == 1                      # shed rows never served
+
+
+def test_bounded_queue_rejects_and_flush_terminates():
+    rng = np.random.default_rng(4)
+    cb, params, srv = _mlp_server(max_queue_rows=8)
+    futs = [srv.submit(_packed(rng, 2)) for _ in range(4)]  # exactly full
+    assert srv.health()["overloaded"] and not srv.health()["healthy"]
+    with pytest.raises(ServerOverloaded):
+        srv.submit(_packed(rng, 1))
+    assert srv.flush() >= 1                         # terminates under pressure
+    for f in futs:
+        assert f.result() is not None
+    assert srv.stats()["faults"]["rejected"] == 1
+    h = srv.health()
+    assert h["healthy"] and not h["overloaded"] and h["queued_rows"] == 0
+    srv.submit(_packed(rng, 2)).cancel()            # admission recovered
+
+
+# ------------------------------------------------------------------ #
+# the recovery ladder                                                  #
+# ------------------------------------------------------------------ #
+def test_poison_row_never_fails_healthy_neighbors():
+    # the PR-6 regression: one bad row in a coalesced flight used to
+    # set the SAME exception on every co-batched future
+    rng = np.random.default_rng(5)
+    chaos = ChaosMonkey()
+    cb, params, srv = _mlp_server(chaos=chaos)
+    good = [_packed(rng, 2) for _ in range(3)]
+    bad = _packed(rng, 2)
+    refs = [cb.apply(params, g) for g in good]
+    chaos.poison(bad)
+    futs = [srv.submit(good[0]), srv.submit(bad),
+            srv.submit(good[1]), srv.submit(good[2])]
+    assert srv.flush() == 1                         # all four coalesced
+    err = futs[1].exception()
+    assert isinstance(err, PoisonRequest)
+    assert isinstance(err.__cause__, PoisonError)   # original chained
+    for f, ref in zip([futs[0], futs[2], futs[3]], refs):
+        np.testing.assert_array_equal(_words(f.result()), _words(ref))
+    st = srv.stats()["faults"]
+    assert st["flights"] == 1 and st["poisoned_requests"] == 1
+    assert st["bisections"] >= 1
+    assert st["retries"] == 0                       # ValueError: no retry
+
+
+def test_transient_fault_recovers_by_retry():
+    rng = np.random.default_rng(6)
+    chaos = ChaosMonkey()
+    cb, params, srv = _mlp_server(chaos=chaos)
+    x = _packed(rng, 3)
+    ref = cb.apply(params, x)
+    chaos.fail_next(TransientFault("flaky"))
+    fut = srv.submit(x)
+    srv.flush()
+    np.testing.assert_array_equal(_words(fut.result()), _words(ref))
+    st = srv.stats()["faults"]
+    assert st["flights"] == 1 and st["retries"] == 1
+    assert st["backend_fallbacks"] == 0 and st["bisections"] == 0
+
+
+def test_backend_fault_falls_back_bit_identical():
+    rng = np.random.default_rng(7)
+    chaos = ChaosMonkey()
+    cb, params, srv = _mlp_server(chaos=chaos)
+    x = _packed(rng, 5)
+    ref = cb.apply(params, x)                       # healthy-path oracle
+    chaos.fail_next(BackendFault("kernel launch failed"))
+    fut = srv.submit(x)
+    srv.flush()
+    np.testing.assert_array_equal(_words(fut.result()), _words(ref))
+    st = srv.stats()["faults"]
+    assert st["backend_fallbacks"] == 1 and st["retries"] == 0
+
+
+def test_exhausted_recovery_surfaces_typed_backend_fault():
+    rng = np.random.default_rng(8)
+    chaos = ChaosMonkey()
+    cb, params, srv = _mlp_server(chaos=chaos, fallback_backend=None,
+                                  max_retries=2)
+    chaos.fail_next(BackendFault("down"), times=3)  # primary + 2 retries
+    fut = srv.submit(_packed(rng, 2))
+    srv.flush()
+    err = fut.exception()
+    assert isinstance(err, BackendFault) and not isinstance(
+        err, PoisonRequest)
+    st = srv.stats()["faults"]
+    assert st["retries"] == 2 and st["backend_fallbacks"] == 0
+
+
+# ------------------------------------------------------------------ #
+# straggler watchdog wiring                                            #
+# ------------------------------------------------------------------ #
+def test_straggler_flag_fires_on_latency_spike():
+    rng = np.random.default_rng(9)
+    chaos = ChaosMonkey()
+    cb, params, srv = _mlp_server(
+        chaos=chaos, watchdog_cfg=WatchdogConfig(min_samples=4))
+    for _ in range(5):                              # build the baseline
+        srv.submit(_packed(rng, 2))
+        srv.flush()
+    chaos.spike_next(0.3)                           # >> 2x median
+    srv.submit(_packed(rng, 2))
+    srv.flush()
+    st = srv.stats()
+    assert 5 in st["straggler_flags"]               # the 6th flight flagged
+    assert 0.0 < st["straggler_median_s"] < 0.3
+
+
+# ------------------------------------------------------------------ #
+# supervised threads, health, shutdown under fault                     #
+# ------------------------------------------------------------------ #
+def test_killed_loops_are_restarted_and_keep_serving():
+    rng = np.random.default_rng(10)
+    chaos = ChaosMonkey()
+    cb, params, srv = _mlp_server(chaos=chaos, supervise_interval_s=0.01)
+    assert srv.health()["healthy"] and not srv.health()["running"]
+    srv.start()
+    assert srv.health()["running"]
+    chaos.kill("dispatcher")
+    chaos.kill("completer")
+    futs = [srv.submit(_packed(rng, 1 + i % 3)) for i in range(8)]
+    for f in futs:
+        assert f.result(timeout=60) is not None
+    srv.stop()
+    st = srv.stats()
+    assert st["faults"]["thread_restarts"] >= 2
+    assert chaos.events["kills"] == 2
+    h = srv.health()
+    assert not h["running"] and h["queue_depth"] == 0
+    assert h["thread_restarts"] == st["faults"]["thread_restarts"]
+
+
+def test_zero_lost_futures_under_chaos_storm_and_stop():
+    # faults + latency spikes + thread kills + a poison payload + an
+    # expired deadline, stop() racing the storm: every future resolves
+    rng = np.random.default_rng(11)
+    chaos = ChaosMonkey(ChaosConfig(
+        seed=0, fault_rate=0.4, latency_spike_rate=0.4,
+        latency_spike_s=0.002))
+    cb, params, srv = _mlp_server(chaos=chaos, retry_backoff_s=0.001,
+                                  supervise_interval_s=0.01)
+    srv.start()
+    chaos.kill("dispatcher")
+    chaos.kill("completer")
+    payloads = [_packed(rng, 1 + i % 4) for i in range(12)]
+    refs = [cb.apply(params, p) for p in payloads]
+    chaos.poison(payloads[5])
+    futs = [srv.submit(p) for p in payloads]
+    expired = srv.submit(_packed(rng, 2), deadline_s=0.0)
+    srv.stop()                                      # drains + resolves all
+    assert all(f.done() for f in futs) and expired.done()
+    assert isinstance(expired.exception(), RequestTimeout)
+    for i, (f, ref) in enumerate(zip(futs, refs)):
+        if i == 5:
+            assert isinstance(f.exception(), PoisonRequest)
+        else:                                       # healthy rows: values,
+            np.testing.assert_array_equal(          # bit-identical ones
+                _words(f.result()), _words(ref))
+    st = srv.stats()["faults"]
+    assert st["poisoned_requests"] == 1 and st["timeouts"] == 1
+    assert srv.health()["queued_rows"] == 0
+
+
+def test_stop_is_idempotent_and_restartable_after_chaos():
+    rng = np.random.default_rng(12)
+    chaos = ChaosMonkey()
+    cb, params, srv = _mlp_server(chaos=chaos, supervise_interval_s=0.01)
+    srv.start()
+    chaos.kill("completer")
+    fut = srv.submit(_packed(rng, 2))
+    assert fut.result(timeout=60) is not None
+    srv.stop()
+    srv.stop()                                      # no-op, no deadlock
+    srv.start()                                     # fresh loops
+    fut2 = srv.submit(_packed(rng, 2))
+    assert fut2.result(timeout=60) is not None
+    srv.stop()
+
+
+# ------------------------------------------------------------------ #
+# checkpoint content digests                                           #
+# ------------------------------------------------------------------ #
+def test_checkpoint_sha256_roundtrip_and_deep_corruption(tmp_path):
+    tree = {"w": np.arange(8192, dtype=np.float32),
+            "b": np.ones(4, np.float32)}
+    path = save(str(tmp_path), 1, tree)
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    assert len(meta["sha256"]) == 64
+    got, _ = restore(str(tmp_path), tree)           # clean roundtrip
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+    npz = os.path.join(path, "arrays.npz")
+    with np.load(npz) as z:
+        arrs = {n: z[n].copy() for n in z.files}
+    big = next(a for a in arrs.values() if a.nbytes > 4096)
+    big.view(np.uint8).reshape(-1)[6000] ^= 0x01    # beyond the prefix
+    np.savez(npz, **arrs)                           # the fingerprint hashes
+    with pytest.raises(ChecksumError, match="sha256"):
+        restore(str(tmp_path), tree)
+    assert issubclass(ChecksumError, IOError)       # old handlers still work
+
+
+def test_checkpoint_without_sha256_key_is_backward_compatible(tmp_path):
+    tree = {"w": np.arange(16, dtype=np.float32)}
+    path = save(str(tmp_path), 1, tree)
+    meta_path = os.path.join(path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["sha256"]                              # an old checkpoint
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    got, _ = restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(got["w"], tree["w"])

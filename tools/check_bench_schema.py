@@ -9,6 +9,10 @@ throughput, device scaling, the continuous-batching stream, and the
 ragged-padding table — which this tool validates structurally on every
 smoke run, so a refactor that silently drops a field (or stops
 measuring a claim) fails CI even when the bench itself ran green.
+Faults artifacts (BENCH_faults*.json, ISSUE 7) carry the SEU /
+threshold-noise curves and the chaos recovery row; their recovery
+invariants (zero lost futures, poison isolation, bit-identical
+fallback) are enforced unconditionally — on smoke and full runs alike.
 
 ``--gate`` additionally enforces the full-run perf acceptance criteria
 on a tracked (non-smoke) serve artifact:
@@ -42,6 +46,20 @@ STREAM_KEYS = ("requests", "rows_each", "rows_total", "sync_wall_s",
 PADDING_KEYS = ("rows", "bucket", "valid", "wall_s",
                 "exact_jit_wall_s", "bucket_jit_wall_s", "occupancy",
                 "compute_occupancy", "overhead_vs_exact")
+FAULTS_TOP = ("env", "smoke", "model", "seu", "thresholds", "chaos")
+SEU_KEYS = ("n_flips", "argmax_match", "mean_abs_logit_delta",
+            "max_abs_logit_delta")
+THRESH_KEYS = ("sigma", "argmax_match", "mean_abs_logit_delta",
+               "max_abs_logit_delta")
+CHAOS_KEYS = ("requests", "zero_lost_futures", "poison_isolated",
+              "fallback_bit_identical", "flight_faults",
+              "backend_fallbacks", "retries", "bisections",
+              "poisoned_requests", "timeouts", "thread_restarts",
+              "storm_wall_s")
+# Invariants, not perf numbers: they must hold on smoke and full runs
+# alike, so check_faults enforces them unconditionally (no --gate).
+CHAOS_INVARIANTS = ("zero_lost_futures", "poison_isolated",
+                    "fallback_bit_identical")
 
 
 def _missing(obj, keys, where):
@@ -103,6 +121,39 @@ def check_serve(doc, path):
     return errs
 
 
+def check_faults(doc, path):
+    """BENCH_faults*.json: fault-injection curves + chaos recovery row
+    (ISSUE 7).  Curve sanity (a zero-injection point that is exactly
+    the healthy forward) and the recovery invariants are validated on
+    every artifact — a faults bench whose server lost a future is a
+    broken artifact, not a slow one."""
+    errs = _missing(doc, FAULTS_TOP, path)
+    if errs:
+        return errs
+    for name, keys, zero_key in (("seu", SEU_KEYS, "n_flips"),
+                                 ("thresholds", THRESH_KEYS, "sigma")):
+        rows = doc[name]
+        if not isinstance(rows, list) or not rows:
+            errs.append(f"{path}: '{name}' must be a non-empty list")
+            continue
+        for i, row in enumerate(rows):
+            errs += _missing(row, keys, f"{path}: {name}[{i}]")
+        z = rows[0]
+        if z.get(zero_key) == 0 and (z.get("argmax_match") != 1.0 or
+                                     z.get("max_abs_logit_delta") != 0):
+            errs.append(f"{path}: {name}[0] is a zero-injection point "
+                        f"but is not bit-identical to the healthy run")
+    chaos = doc["chaos"]
+    if not isinstance(chaos, dict):
+        return errs + [f"{path}: 'chaos' must be an object"]
+    errs += _missing(chaos, CHAOS_KEYS, f"{path}: chaos")
+    for k in CHAOS_INVARIANTS:
+        if k in chaos and chaos[k] is not True:
+            errs.append(f"{path}: chaos.{k} = {chaos[k]} — recovery "
+                        f"invariant violated")
+    return errs
+
+
 def gate_serve(doc, path):
     """The full-run perf acceptance criteria (never applied to smoke
     artifacts: smoke shapes only measure dispatch overhead)."""
@@ -133,10 +184,16 @@ def check_file(path, gate=False):
         return [f"{path}: unreadable ({e})"]
     errs = check_env(doc, path)
     is_serve = "throughput" in doc or "scaling" in doc
+    is_faults = "seu" in doc and "chaos" in doc
     if is_serve:
         errs += check_serve(doc, path)
         if gate and not errs:
             errs += gate_serve(doc, path)
+    elif is_faults:
+        errs += check_faults(doc, path)
+        if gate:
+            errs.append(f"{path}: --gate only applies to serve "
+                        f"artifacts (faults invariants are always on)")
     elif gate:
         errs.append(f"{path}: --gate only applies to serve artifacts")
     return errs
