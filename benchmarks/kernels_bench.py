@@ -47,6 +47,7 @@ CONV_OUT = os.path.join(_HERE, "BENCH_conv.json")
 COMPILE_OUT = os.path.join(_HERE, "BENCH_compile.json")
 SERVE_OUT = os.path.join(_HERE, "BENCH_serve.json")
 FAULTS_OUT = os.path.join(_HERE, "BENCH_faults.json")
+TRAIN_OUT = os.path.join(_HERE, "BENCH_train.json")
 
 
 def model_bytes(m, k, n):
@@ -850,6 +851,154 @@ def run_faults(log=print, out_json=FAULTS_OUT, smoke=False):
     return out
 
 
+def run_train(log=print, out_json=TRAIN_OUT, smoke=False):
+    """The closed train->fold->compile->serve loop (ISSUE 8).
+
+    STE-trains each model on the deterministic synthetic image stream
+    (data/images.py), then walks the whole export contract with hard
+    gates, raised on violation:
+
+      * learning — held-out eval accuracy must beat chance by the
+        model's margin (the synthetic task is separable by
+        construction, so failing this means the loop is broken);
+      * fold bit-consistency — the folded packed CompiledBNN forward
+        must be EXACTLY equal to the training eval forward
+        (check_sign_identity);
+      * serve bit-consistency — the same equality end to end through
+        BNNServer.apply_batch;
+      * checkpoint round-trip — (params, bn) through the sha256
+        checkpointer come back bit-identical.
+
+    Full runs train the binary MLP and the BinaryNet CIFAR-10
+    topology; smoke trains a tiny MLP only.
+    """
+    import shutil
+    import tempfile
+
+    from repro import graph, train
+    from repro.checkpoint import restore, save
+    from repro.core.workloads import binarynet_cifar10
+    from repro.data import ImageDataConfig
+    from repro.data.images import eval_batch_at
+    from repro.serving import BNNServer
+    from repro.train.export import _serving_input
+
+    log("\n== STE training -> fold -> compile -> serve ==")
+    jobs = []
+    if smoke:
+        d = ImageDataConfig(4, 8, 8, 2, global_batch=16, seed=0,
+                            flip_prob=0.02)
+        s = graph.from_dense_stack(d.n_pixels, [64, d.num_classes],
+                                   logits=True, name="train_mlp_smoke")
+        jobs.append((s, d, train.TrainConfig(steps=40, lr=0.05,
+                                             log_every=10), 2, 0.15))
+    else:
+        d = ImageDataConfig(10, 16, 16, 3, global_batch=32, seed=0,
+                            flip_prob=0.02)
+        s = graph.from_dense_stack(d.n_pixels, [256, d.num_classes],
+                                   logits=True, name="train_mlp")
+        jobs.append((s, d, train.TrainConfig(steps=120, lr=0.05,
+                                             log_every=20), 4, 0.4))
+        db = ImageDataConfig(10, 32, 32, 3, global_batch=8, seed=0,
+                             flip_prob=0.02)
+        sb = graph.from_workload(binarynet_cifar10())
+        jobs.append((sb, db, train.TrainConfig(steps=60, lr=0.02,
+                                               log_every=10), 4, 0.15))
+
+    models = []
+    for spec, dcfg, tcfg, eval_batches, margin in jobs:
+        chance = 1.0 / dcfg.num_classes
+        log(f"-- {spec.name}: {tcfg.steps} steps x batch "
+            f"{dcfg.global_batch} on {dcfg.height}x{dcfg.width}x"
+            f"{dcfg.channels}/{dcfg.num_classes}-class images")
+        t0 = time.perf_counter()
+        out = train.fit(spec, dcfg, tcfg, log_fn=lambda m: log("   " + m))
+        wall = time.perf_counter() - t0
+        params, bn = out["params"], out["bn"]
+
+        ev = train.evaluate(spec, params, bn, dcfg,
+                            n_batches=eval_batches)
+        ev_latent = train.evaluate(spec, params, bn, dcfg,
+                                   n_batches=eval_batches,
+                                   binarize=False)
+        assert ev["acc"] > chance + margin, (
+            f"{spec.name}: eval acc {ev['acc']:.3f} does not beat "
+            f"chance {chance:.2f} + margin {margin:.2f}")
+
+        # fold + serve bit-consistency on a held-out batch
+        x = eval_batch_at(dcfg, eval_batches + 1)["image"]
+        if len(spec.input_shape) == 1:
+            x = x.reshape(x.shape[0], -1)
+        cb, sparams = train.export_compiled(spec, params, bn,
+                                            backend="xla",
+                                            batch=x.shape[0])
+        stats = train.check_sign_identity(spec, params, bn, x,
+                                          cb=cb, sparams=sparams)
+        fold_ok = stats["max_abs_logit_delta"] == 0.0 \
+            and stats["argmax_agreement"] == 1.0
+        srv = BNNServer(cb, sparams, max_batch=x.shape[0])
+        served = srv.apply_batch(_serving_input(spec, x, cb.backend))
+        eval_logits, _ = train.train_forward(spec, params, bn,
+                                             jnp.asarray(x), train=False)
+        serve_ok = bool(np.array_equal(
+            np.asarray(served, np.float32),
+            np.asarray(eval_logits, np.float32)))
+        assert fold_ok and serve_ok, \
+            f"{spec.name}: fold/serve bit-consistency violated"
+
+        # sha256 checkpoint round-trip, bit-identical
+        tmp = tempfile.mkdtemp(prefix="bench_train_ckpt_")
+        try:
+            save(tmp, out["step"], (params, bn),
+                 extra={"step": out["step"]})
+            (p2, b2), _meta = restore(tmp, (params, bn))
+            flat_a = jax.tree.leaves((params, bn))
+            flat_b = jax.tree.leaves((p2, b2))
+            ckpt_ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+                          for a, b in zip(flat_a, flat_b))
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+        assert ckpt_ok, f"{spec.name}: checkpoint round-trip diverged"
+
+        losses = out["losses"]
+        stride = max(1, len(losses) // 20)
+        log(f"   loss {losses[0]:.3f} -> {losses[-1]:.3f} | eval acc "
+            f"{ev['acc']:.3f} (latent {ev_latent['acc']:.3f}, chance "
+            f"{chance:.2f}) | fold/serve/ckpt bit-identical | "
+            f"{wall:.1f}s ({tcfg.steps / wall:.2f} steps/s)")
+        models.append({
+            "name": spec.name,
+            "steps": tcfg.steps,
+            "global_batch": dcfg.global_batch,
+            "num_classes": dcfg.num_classes,
+            "chance": chance,
+            "margin": margin,
+            "first_train_loss": losses[0],
+            "final_train_loss": losses[-1],
+            "loss_curve": losses[::stride],
+            "train_acc_final": out["accs"][-1],
+            "eval_acc": ev["acc"],
+            "eval_loss": ev["loss"],
+            "eval_rows": ev["rows"],
+            "latent_eval_acc": ev_latent["acc"],
+            "binarization_gap": ev_latent["acc"] - ev["acc"],
+            "fold_bit_consistent": fold_ok,
+            "serve_bit_consistent": serve_ok,
+            "ckpt_roundtrip_exact": ckpt_ok,
+            "sign_identity_rows": stats["rows"],
+            "wall_train_s": wall,
+            "steps_per_s": tcfg.steps / wall,
+        })
+
+    out = {"env": _env(), "host_backend": jax.default_backend(),
+           "smoke": smoke, "models": models}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(out, f, indent=1)
+        log(f"wrote {out_json}")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
@@ -876,9 +1025,14 @@ if __name__ == "__main__":
                          "threshold noise) + chaos recovery gates "
                          "(fails on poison leakage, fallback "
                          "divergence, or any lost future)")
+    ap.add_argument("--train", action="store_true",
+                    help="STE-train, fold, compile, and serve the image "
+                         "models end to end (fails when eval accuracy "
+                         "does not beat chance by the margin, or on any "
+                         "fold/serve/checkpoint bit-inconsistency)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small shapes for CI (with "
-                         "--fused/--conv/--compile/--serve/--faults)")
+                    help="small shapes for CI (with --fused/--conv/"
+                         "--compile/--serve/--faults/--train)")
     args = ap.parse_args()
 
     def dest_for(default):
@@ -901,5 +1055,7 @@ if __name__ == "__main__":
         run_serve(out_json=dest_for(SERVE_OUT), smoke=args.smoke)
     elif args.faults:
         run_faults(out_json=dest_for(FAULTS_OUT), smoke=args.smoke)
+    elif args.train:
+        run_train(out_json=dest_for(TRAIN_OUT), smoke=args.smoke)
     else:
         run(out_json=dest_for(DEFAULT_OUT))

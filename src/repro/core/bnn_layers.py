@@ -180,6 +180,30 @@ def quantize_for_serving(w, mu, sigma, gamma, beta, eps: float = 1e-5):
     return wp, fold
 
 
+def quantize_conv_for_serving(w, mu, sigma, gamma, beta,
+                              eps: float = 1e-5):
+    """Conv twin of :func:`quantize_for_serving`: convert a trained
+    binarized conv layer ``w [KH, KW, C, F]`` + its BN statistics to
+    the integer serving form — a channel-packed PackedArray filter
+    (axis 2, the layout ops.binary_conv2d takes) and the folded
+    per-output-channel threshold.  The per-channel alpha scale
+    (mean |w| over the KH*KW*C taps) passes through the sign, so the
+    fold absorbs it into BN's statistics exactly as the dense path
+    does.  Drop the pair straight into CompiledBNN conv params as
+    ``{"wf": wf, "t": fold}`` — binary_conv rewrites the
+    FoldedThreshold to the fused per-channel form at bind time."""
+    kh, kw, c_in, _f = w.shape
+    n = kh * kw * c_in
+    wb = jnp.where(w > 0, 1.0, -1.0)
+    alpha = jnp.mean(jnp.abs(w), axis=(0, 1, 2))
+    wf = PackedArray.pack(wb, axis=2)
+    a = jnp.where(alpha == 0, 1e-12, alpha)
+    sd = jnp.sqrt(jnp.asarray(sigma, jnp.float32) ** 2 + eps)
+    fold = fold_bn_threshold(jnp.asarray(mu) / a, sd / a,
+                             gamma, beta, n, eps=0.0)
+    return wf, fold
+
+
 # ------------------------------------------------------------------ #
 # convolutional layers (the paper's Table III-V workload bodies)       #
 # ------------------------------------------------------------------ #

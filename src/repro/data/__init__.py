@@ -1,4 +1,11 @@
+from repro.data.images import (ImageDataConfig, ImageIterator,
+                               class_prototypes, eval_batch_at,
+                               image_batch_at, image_shard_batch_at,
+                               load_cifar10)
 from repro.data.pipeline import (DataConfig, DataIterator, global_batch_at,
                                  shard_batch_at)
 
-__all__ = ["DataConfig", "DataIterator", "global_batch_at", "shard_batch_at"]
+__all__ = ["DataConfig", "DataIterator", "global_batch_at",
+           "shard_batch_at", "ImageDataConfig", "ImageIterator",
+           "class_prototypes", "eval_batch_at", "image_batch_at",
+           "image_shard_batch_at", "load_cifar10"]

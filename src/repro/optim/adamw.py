@@ -66,15 +66,22 @@ def clip_by_global_norm(grads, max_norm: float):
                                    ).astype(g.dtype), grads), gn
 
 
-def apply_updates(params, opt: OptState, grads,
-                  cfg: AdamWConfig) -> Tuple[Any, OptState, dict]:
+def apply_updates(params, opt: OptState, grads, cfg: AdamWConfig,
+                  clip_mask: Optional[Any] = None
+                  ) -> Tuple[Any, OptState, dict]:
+    """One AdamW step.  ``clip_mask`` (a bool pytree matching params,
+    or None) selects which leaves the ``clip_latent`` [-1, 1] clamp
+    applies to — BNN training clamps the latent sign weights so the
+    STE window stays active, but BN gamma/beta must stay unclamped or
+    the fold-time thresholds cannot grow past +-1.  None keeps the
+    historical behavior: clamp every leaf when cfg.clip_latent."""
     grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
     step = opt.step + 1
     lr = schedule(cfg, step)
     b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
     b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
 
-    def upd(p, m, v, g):
+    def upd(p, m, v, g, clamp):
         g32 = g.astype(jnp.float32)
         m = cfg.b1 * m + (1 - cfg.b1) * g32
         v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
@@ -83,7 +90,7 @@ def apply_updates(params, opt: OptState, grads,
         delta = mh / (jnp.sqrt(vh) + cfg.eps) \
             + cfg.weight_decay * p.astype(jnp.float32)
         new = p.astype(jnp.float32) - lr * delta
-        if cfg.clip_latent:
+        if cfg.clip_latent and clamp:
             new = jnp.clip(new, -1.0, 1.0)
         return new.astype(p.dtype), m, v
 
@@ -91,8 +98,11 @@ def apply_updates(params, opt: OptState, grads,
     flat_m = tdef.flatten_up_to(opt.m)
     flat_v = tdef.flatten_up_to(opt.v)
     flat_g = tdef.flatten_up_to(grads)
-    out = [upd(p, m, v, g)
-           for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    flat_c = [True] * len(flat_p) if clip_mask is None \
+        else [bool(c) for c in tdef.flatten_up_to(clip_mask)]
+    out = [upd(p, m, v, g, c)
+           for p, m, v, g, c in zip(flat_p, flat_m, flat_v, flat_g,
+                                    flat_c)]
     new_p = tdef.unflatten([o[0] for o in out])
     new_m = tdef.unflatten([o[1] for o in out])
     new_v = tdef.unflatten([o[2] for o in out])

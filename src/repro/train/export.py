@@ -1,0 +1,136 @@
+"""Export a trained STE checkpoint into the packed serving artifact.
+
+The fold-at-export rule (DESIGN.md §12): training owns fp32 latent
+weights and float BN; serving owns packed sign words and integer
+per-channel thresholds.  The ONLY bridge between the two is this
+module — it rewrites (params, bn_state) from train/models.py into the
+CompiledBNN param layout through the exact-fold machinery
+(core.bnn_layers.quantize_for_serving / quantize_conv_for_serving),
+so the folded packed forward is sign-identical to the training eval
+forward by construction, and :func:`check_sign_identity` asserts it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import graph
+from repro.core.bnn_layers import quantize_conv_for_serving, quantize_for_serving
+from repro.graph.ir import BinaryConv, BNNSpec, IntegerEntry
+from repro.kernels.ops import binarize_pack
+from repro.kernels.packed import PackedArray
+from repro.train.models import BN_EPS, train_forward
+
+__all__ = ["export_serving_params", "export_compiled", "check_sign_identity"]
+
+
+def export_serving_params(
+    spec: BNNSpec,
+    params: Dict[str, Any],
+    bn_state: Dict[str, Any],
+) -> Dict[str, Any]:
+    """Latent/BN training params -> packed serving params in the
+    CompiledBNN layout.  Integer entries keep their float weights +
+    alpha; thresholded binary conv/dense layers fold BN running stats
+    (mu, sqrt(var)) into a FoldedThreshold with the alpha scale
+    absorbed; the terminal dense packs the bare weight signs (its
+    serving output is the raw int32 dot)."""
+    out: Dict[str, Any] = {"conv": [], "fc": []}
+    for i, nd in enumerate(spec.conv_nodes):
+        p = params["conv"][i]
+        if isinstance(nd, IntegerEntry):
+            alpha = jnp.mean(jnp.abs(p["w"].astype(jnp.float32)), axis=(0, 1, 2))
+            out["conv"].append({"w": p["w"], "alpha": alpha})
+        else:
+            assert isinstance(nd, BinaryConv)
+            bn = bn_state["conv"][i]
+            wf, fold = quantize_conv_for_serving(
+                p["w"],
+                bn["mu"],
+                jnp.sqrt(bn["var"]),
+                p["gamma"],
+                p["beta"],
+                eps=BN_EPS,
+            )
+            out["conv"].append({"wf": wf, "t": fold})
+    for j, nd in enumerate(spec.dense_nodes):
+        p = params["fc"][j]
+        if spec.thresholded(nd):
+            bn = bn_state["fc"][j]
+            wp, fold = quantize_for_serving(
+                p["w"],
+                bn["mu"],
+                jnp.sqrt(bn["var"]),
+                p["gamma"],
+                p["beta"],
+                eps=BN_EPS,
+            )
+            out["fc"].append({"wp": wp, "t": fold})
+        else:
+            wb = jnp.where(p["w"] > 0, 1.0, -1.0)
+            out["fc"].append({"wp": PackedArray.pack(wb, axis=-1)})
+    return out
+
+
+def export_compiled(
+    spec: BNNSpec,
+    params: Dict[str, Any],
+    bn_state: Dict[str, Any],
+    backend: Optional[str] = None,
+    batch: int = 1,
+    vmem_budget: Optional[int] = None,
+) -> Tuple["graph.CompiledBNN", Dict[str, Any]]:
+    """The whole train->serve bridge in one call: fold the checkpoint
+    and compile its spec.  The returned pair drops straight into
+    ``BNNServer(cb, sparams)``."""
+    cb = graph.compile(spec, backend=backend, batch=batch, vmem_budget=vmem_budget)
+    return cb, export_serving_params(spec, params, bn_state)
+
+
+def _serving_input(spec: BNNSpec, x, backend: Optional[str]):
+    """Image specs take float NHWC on both sides; dense-entry specs
+    take float rows in training and their sign-pack in serving."""
+    if len(spec.input_shape) == 1:
+        return binarize_pack(jnp.asarray(x), backend=backend)
+    return jnp.asarray(x)
+
+
+def check_sign_identity(
+    spec: BNNSpec,
+    params: Dict[str, Any],
+    bn_state: Dict[str, Any],
+    x,
+    backend: Optional[str] = None,
+    cb: Optional["graph.CompiledBNN"] = None,
+    sparams: Optional[Dict[str, Any]] = None,
+) -> Dict[str, float]:
+    """Assert the folded packed serving forward is sign-identical to
+    the training eval forward on ``x`` — logits EXACTLY equal (both
+    sides produce the same integer-valued dot for the terminal layer),
+    argmax agreement 1.0.  Returns the comparison stats; raises on any
+    divergence.  This is the train->fold->compile->serve contract the
+    BENCH_train gate tracks."""
+    eval_logits, _ = train_forward(spec, params, bn_state, jnp.asarray(x), train=False)
+    if cb is None or sparams is None:
+        cb, sparams = export_compiled(
+            spec,
+            params,
+            bn_state,
+            backend=backend,
+            batch=int(np.shape(x)[0]),
+        )
+    served = cb.apply(sparams, _serving_input(spec, x, cb.backend))
+    ev = np.asarray(eval_logits)
+    sv = np.asarray(served, dtype=ev.dtype)
+    msg = "folded packed serving forward diverges from the training eval forward"
+    np.testing.assert_array_equal(sv, ev, err_msg=msg)
+    agree = float(np.mean(np.argmax(sv, -1) == np.argmax(ev, -1)))
+    assert agree == 1.0
+    return {
+        "rows": int(ev.shape[0]),
+        "argmax_agreement": agree,
+        "max_abs_logit_delta": float(np.max(np.abs(sv - ev))),
+    }

@@ -1,0 +1,231 @@
+"""The STE training loop: jit step, eval path, checkpointed fit().
+
+Wires every substrate together for the binarized image models the
+compiler serves: the deterministic image pipeline (data/images.py) ->
+a jit'd value_and_grad step over train/models.py's STE forward ->
+optim/adamw.py on the latent weights (clip_mask keeps BN gamma/beta
+out of the [-1, 1] clamp) -> atomic sha256-verified checkpoints with
+the data cursor -> auto-resume that reproduces the uninterrupted
+trajectory bit-for-bit (tests/test_train.py).
+
+``fit`` trains any Logits-terminated BNNSpec — the binary MLP and the
+BinaryNet CIFAR-10 topology both go through this one entry point, and
+the result's (params, bn_state) fold straight into serving via
+train/export.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.data.images import ImageDataConfig, ImageIterator, eval_batch_at
+from repro.graph.ir import BNNSpec
+from repro.optim import adamw
+from repro.train.models import (
+    BN_MOMENTUM,
+    clip_mask_for,
+    init_train_state,
+    train_forward,
+)
+
+__all__ = [
+    "TrainConfig",
+    "fit",
+    "evaluate",
+    "make_train_step",
+    "default_logit_scale",
+]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int
+    lr: float = 0.01
+    weight_decay: float = 1e-4
+    warmup_frac: float = 0.1
+    clip_norm: float = 5.0
+    logit_scale: Optional[float] = None  # None: 1/sqrt(last n_in)
+    bn_momentum: float = BN_MOMENTUM
+    seed: int = 0
+    ckpt_every: int = 0  # 0: no checkpoints
+    log_every: int = 10
+
+
+def default_logit_scale(spec: BNNSpec) -> float:
+    """The pm1 dot of the terminal K-wide layer lands in [-K, K]; at
+    init its scale is ~sqrt(K), so 1/sqrt(K) puts the softmax in its
+    responsive range without touching the (scale-invariant) argmax."""
+    return 1.0 / float(np.sqrt(spec.dense_nodes[-1].n_in))
+
+
+def _loss(logits: jax.Array, labels: jax.Array, scale: float):
+    lp = jax.nn.log_softmax(logits * scale, axis=-1)
+    ce = -jnp.take_along_axis(lp, labels[:, None], axis=-1).mean()
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return ce, acc
+
+
+def _model_input(spec: BNNSpec, images: jax.Array) -> jax.Array:
+    """Dense-entry specs take flattened rows; conv specs NHWC."""
+    if len(spec.input_shape) == 1:
+        return images.reshape(images.shape[0], -1)
+    return images
+
+
+def make_train_step(
+    spec: BNNSpec,
+    opt_cfg: adamw.AdamWConfig,
+    logit_scale: float,
+    bn_momentum: float = BN_MOMENTUM,
+):
+    """The jit-compiled training step: STE forward with batch-stat BN,
+    cross-entropy on the scaled logits, AdamW on the latent weights
+    with the w-only [-1, 1] clamp."""
+
+    def step(params, bn, opt, images, labels):
+        def loss_fn(p):
+            logits, new_bn = train_forward(
+                spec,
+                p,
+                bn,
+                _model_input(spec, images),
+                train=True,
+                momentum=bn_momentum,
+            )
+            ce, acc = _loss(logits, labels, logit_scale)
+            return ce, (new_bn, acc)
+
+        (ce, (new_bn, acc)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, metrics = adamw.apply_updates(
+            params, opt, grads, opt_cfg, clip_mask=clip_mask_for(params)
+        )
+        return params, new_bn, opt, dict(metrics, loss=ce, acc=acc)
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+def evaluate(
+    spec: BNNSpec,
+    params,
+    bn,
+    dcfg: ImageDataConfig,
+    n_batches: int = 4,
+    binarize: bool = True,
+    logit_scale: Optional[float] = None,
+) -> Dict[str, float]:
+    """Held-out accuracy/loss on the eval stream (sample counters
+    disjoint from every training step).  ``binarize=False`` runs the
+    fp32-latent twin — the ceiling the binarization gap is measured
+    against."""
+    scale = logit_scale if logit_scale is not None else default_logit_scale(spec)
+
+    @jax.jit
+    def eval_step(p, b, images, labels):
+        logits, _ = train_forward(
+            spec, p, b, _model_input(spec, images), train=False, binarize=binarize
+        )
+        ce, acc = _loss(logits, labels, scale)
+        return ce, acc
+
+    losses, accs = [], []
+    for j in range(n_batches):
+        batch = eval_batch_at(dcfg, j)
+        ce, acc = eval_step(
+            params, bn, jnp.asarray(batch["image"]), jnp.asarray(batch["label"])
+        )
+        losses.append(float(ce))
+        accs.append(float(acc))
+    return {
+        "loss": float(np.mean(losses)),
+        "acc": float(np.mean(accs)),
+        "rows": n_batches * dcfg.global_batch,
+    }
+
+
+def fit(
+    spec: BNNSpec,
+    dcfg: ImageDataConfig,
+    tcfg: TrainConfig,
+    ckpt_dir: Optional[str] = None,
+    run_steps: Optional[int] = None,
+    log_fn=print,
+) -> Dict[str, Any]:
+    """Train ``spec`` on the deterministic image stream.
+
+    ``ckpt_dir``: save (params, bn, opt) + the data cursor every
+    ``tcfg.ckpt_every`` steps (atomic, sha256-verified) and auto-resume
+    from the latest complete checkpoint; a resumed run's loss/param
+    trajectory is bit-identical to an uninterrupted one.
+    ``run_steps``: execute at most this many steps this invocation
+    (simulated preemption — the schedule horizon stays tcfg.steps)."""
+    spec.validate()
+    scale = tcfg.logit_scale
+    if scale is None:
+        scale = default_logit_scale(spec)
+    opt_cfg = adamw.AdamWConfig(
+        lr=tcfg.lr,
+        weight_decay=tcfg.weight_decay,
+        clip_norm=tcfg.clip_norm,
+        total_steps=max(tcfg.steps, 2),
+        warmup_steps=max(1, int(tcfg.steps * tcfg.warmup_frac)),
+    )
+
+    params, bn = init_train_state(jax.random.PRNGKey(tcfg.seed), spec)
+    opt = adamw.init(params)
+    start_step = 0
+    data = ImageIterator(dcfg)
+    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        (params, bn, opt), meta = restore(ckpt_dir, (params, bn, opt))
+        params = jax.tree.map(jnp.asarray, params)
+        bn = jax.tree.map(jnp.asarray, bn)
+        opt = jax.tree.map(jnp.asarray, opt)
+        start_step = int(meta["extra"]["step"])
+        data = ImageIterator.from_state(
+            dcfg, meta["extra"]["data"], shard=0, n_shards=1
+        )
+        log_fn(f"[resume] from step {start_step}")
+
+    step_fn = make_train_step(spec, opt_cfg, scale, tcfg.bn_momentum)
+    losses: list = []
+    accs: list = []
+    end = tcfg.steps
+    if run_steps is not None:
+        end = min(tcfg.steps, start_step + run_steps)
+    for it in range(start_step, end):
+        batch = next(data)
+        params, bn, opt, m = step_fn(
+            params, bn, opt, jnp.asarray(batch["image"]), jnp.asarray(batch["label"])
+        )
+        losses.append(float(m["loss"]))
+        accs.append(float(m["acc"]))
+        if it % tcfg.log_every == 0 or it == tcfg.steps - 1:
+            log_fn(
+                f"step {it:5d} loss {losses[-1]:.4f} "
+                f"acc {accs[-1]:.3f} "
+                f"gnorm {float(m['grad_norm']):.3f}"
+            )
+        save_now = (it + 1) % tcfg.ckpt_every == 0 if tcfg.ckpt_every else False
+        if ckpt and tcfg.ckpt_every and (save_now or it == end - 1):
+            ckpt.save(
+                it + 1,
+                (params, bn, opt),
+                extra={"step": it + 1, "data": data.state_dict()},
+            )
+    if ckpt:
+        ckpt.wait()
+    return {
+        "losses": losses,
+        "accs": accs,
+        "params": params,
+        "bn": bn,
+        "opt": opt,
+        "step": end,
+        "logit_scale": scale,
+    }

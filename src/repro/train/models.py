@@ -1,0 +1,297 @@
+"""Trainable STE forward over a BNNSpec (DESIGN.md §12).
+
+One spec, three executions: the compiler lowers a
+:class:`~repro.graph.ir.BNNSpec` to the packed serving executable and
+the TULIP schedule model; this module walks the SAME node chain in the
+float straight-through-estimator domain — fp32 latent weights,
+``ste_sign`` forwards (Courbariaux et al., the paper's §II recipe),
+float batch norm — so a trained checkpoint folds into the packed
+datapath with *sign-identical* activations.
+
+Every convention mirrors the serving datapath exactly (the eval
+forward is the contract the fold/serve bit-consistency gate compares):
+
+  * binarize / pack bit = ``x > 0``  (eval; training uses ste_sign,
+    which differs only at exactly 0 — the synthetic image pipeline
+    keeps values off zero by construction);
+  * folded-BN compare = ``BN(s) >= 0``  (ties go to +1, matching
+    ``apply_folded``'s ``s >= T``);
+  * weight sign at export = ``w > 0``  (quantize_for_serving);
+  * binary-conv spatial padding = -1 (all-zero packed words are -1
+    under the pm1 bit code), integer-entry padding = real zeros;
+  * max-pool over pm1 activations = the packed OR.
+
+Params mirror the CompiledBNN layout ({"conv": [...], "fc": [...]})
+with latent float weights and BN gamma/beta in place of packed words
+and folded thresholds; BN running statistics live in a parallel
+``bn_state`` tree (not gradient-updated).  train/export.py rewrites
+(params, bn_state) into serving params through the exact-fold
+machinery in core/bnn_layers.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import ste_sign
+from repro.graph.ir import (
+    Binarize,
+    BinaryConv,
+    BinaryDense,
+    BNNSpec,
+    BNThreshold,
+    IntegerEntry,
+    Logits,
+    MaxPool,
+)
+
+__all__ = [
+    "init_train_state",
+    "train_forward",
+    "clip_mask_for",
+    "BN_EPS",
+    "BN_MOMENTUM",
+]
+
+BN_EPS = 1e-5  # must match core.bnn_layers.quantize_* fold eps
+BN_MOMENTUM = 0.9
+
+
+def _sign(x: jax.Array, train: bool) -> jax.Array:
+    """Training: ste_sign (clipped-identity gradient).  Eval: the
+    serving pack convention ``x > 0`` — identical everywhere but
+    exactly 0, and THE convention the packed datapath uses, so the
+    fold/serve gate compares like against like."""
+    if train:
+        return ste_sign(x)
+    return jnp.where(x > 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _sign_ge(x: jax.Array, train: bool) -> jax.Array:
+    """Post-BN sign: ``>= 0`` ties to +1, matching apply_folded's
+    integer ``s >= T`` compare (ste_sign already signs >=0 to +1)."""
+    if train:
+        return ste_sign(x)
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _wsign(w: jax.Array, train: bool) -> jax.Array:
+    """Latent-weight sign.  Export packs ``w > 0`` (quantize_*), so
+    eval must too; training keeps the ste_sign vjp."""
+    if train:
+        return ste_sign(w)
+    return jnp.where(w > 0, 1.0, -1.0).astype(w.dtype)
+
+
+def _conv(
+    x: jax.Array,
+    wb: jax.Array,
+    stride: int,
+    pad: int,
+    pad_value: float,
+) -> jax.Array:
+    """NHWC x HWIO conv with explicit symmetric pad of ``pad_value``
+    (-1 for the packed binary domain, 0 for the real-input entry)."""
+    if pad:
+        x = jnp.pad(
+            x,
+            ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+            constant_values=pad_value,
+        )
+    return jax.lax.conv_general_dilated(
+        x,
+        wb,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _batch_norm(
+    s: jax.Array,
+    bn: Dict[str, jax.Array],
+    p: Dict[str, jax.Array],
+    train: bool,
+    momentum: float,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """BN over all axes but the channel axis (-1).  Training uses
+    batch statistics and returns updated running stats; eval uses the
+    running stats — the exact numbers the export-time fold consumes
+    (bn_reference with sigma = sqrt(var), eps = BN_EPS)."""
+    if train:
+        axes = tuple(range(s.ndim - 1))
+        mu = jnp.mean(s, axis=axes)
+        var = jnp.var(s, axis=axes)
+        new_bn = {
+            "mu": momentum * bn["mu"] + (1 - momentum) * mu,
+            "var": momentum * bn["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = bn["mu"], bn["var"]
+        new_bn = bn
+    y = p["gamma"] * (s - mu) / jnp.sqrt(var + BN_EPS) + p["beta"]
+    return y, new_bn
+
+
+def _maxpool(x: jax.Array, window: int, stride: int) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+# ------------------------------------------------------------------ #
+# state init                                                           #
+# ------------------------------------------------------------------ #
+def init_train_state(
+    key,
+    spec: BNNSpec,
+    dtype=jnp.float32,
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(params, bn_state) for a spec.  Weight shapes and key-split
+    order match CompiledBNN.init, so a training run and a random
+    serving init agree on geometry by construction.  Thresholded
+    conv/dense layers carry BN gamma (init 1) and beta (init 0);
+    bn_state mirrors them with running mu (0) / var (1)."""
+    conv_nodes = spec.conv_nodes
+    dense_nodes = spec.dense_nodes
+    ks = jax.random.split(key, len(conv_nodes) + len(dense_nodes))
+    params: Dict[str, Any] = {"conv": [], "fc": []}
+    bn_state: Dict[str, Any] = {"conv": [], "fc": []}
+    for i, nd in enumerate(conv_nodes):
+        fan_in = nd.kh * nd.kw * nd.c_in
+        shape = (nd.kh, nd.kw, nd.c_in, nd.c_out)
+        w = jax.random.normal(ks[i], shape, dtype) / jnp.sqrt(
+            jnp.asarray(fan_in, dtype)
+        )
+        p: Dict[str, Any] = {"w": w}
+        b: Dict[str, Any] = {}
+        if isinstance(nd, BinaryConv) and spec.thresholded(nd):
+            p["gamma"] = jnp.ones((nd.c_out,), dtype)
+            p["beta"] = jnp.zeros((nd.c_out,), dtype)
+            b = {
+                "mu": jnp.zeros((nd.c_out,), jnp.float32),
+                "var": jnp.ones((nd.c_out,), jnp.float32),
+            }
+        params["conv"].append(p)
+        bn_state["conv"].append(b)
+    for j, nd in enumerate(dense_nodes):
+        kj = ks[len(conv_nodes) + j]
+        w = jax.random.normal(kj, (nd.n_out, nd.n_in), dtype) / jnp.sqrt(
+            jnp.asarray(nd.n_in, dtype)
+        )
+        p = {"w": w}
+        b = {}
+        if spec.thresholded(nd):
+            p["gamma"] = jnp.ones((nd.n_out,), dtype)
+            p["beta"] = jnp.zeros((nd.n_out,), dtype)
+            b = {
+                "mu": jnp.zeros((nd.n_out,), jnp.float32),
+                "var": jnp.ones((nd.n_out,), jnp.float32),
+            }
+        params["fc"].append(p)
+        bn_state["fc"].append(b)
+    return params, bn_state
+
+
+def clip_mask_for(params: Dict[str, Any]) -> Dict[str, Any]:
+    """The optim.adamw clip_mask: clamp latent sign weights to [-1, 1]
+    (keeps the STE window active) but never BN gamma/beta (the folded
+    thresholds must be free to grow past the clamp)."""
+    return {
+        "conv": [{k: k == "w" for k in p} for p in params["conv"]],
+        "fc": [{k: k == "w" for k in p} for p in params["fc"]],
+    }
+
+
+# ------------------------------------------------------------------ #
+# the forward                                                          #
+# ------------------------------------------------------------------ #
+def train_forward(
+    spec: BNNSpec,
+    params: Dict[str, Any],
+    bn_state: Dict[str, Any],
+    x: jax.Array,
+    *,
+    train: bool,
+    binarize: bool = True,
+    momentum: float = BN_MOMENTUM,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Walk spec.nodes in the float STE domain; returns (logits,
+    new_bn_state).  ``x``: float NHWC for image specs, float [B, K]
+    for dense-entry specs (the serving side sees binarize_pack(x)).
+
+    ``binarize=False`` is the fp32-latent diagnostic twin: identical
+    graph, but weights stay latent floats and activations pass through
+    a tanh instead of the sign — the accuracy ceiling the binarized
+    net is measured against (the BENCH_train "binarization gap")."""
+    conv_i = fc_i = 0
+    new_bn = {"conv": list(bn_state["conv"]), "fc": list(bn_state["fc"])}
+
+    def act(v):
+        return _sign(v, train) if binarize else jnp.tanh(v)
+
+    def act_ge(v):
+        return _sign_ge(v, train) if binarize else jnp.tanh(v)
+
+    def alpha_of(w, axes):
+        return jax.lax.stop_gradient(jnp.mean(jnp.abs(w), axis=axes))
+
+    h = x
+    if isinstance(spec.nodes[0], BinaryDense):
+        h = act(h)  # dense entry: sign the input
+    for nd in spec.nodes:
+        if isinstance(nd, IntegerEntry):
+            p = params["conv"][conv_i]
+            # alpha over (kh, kw, c_in): matches binary_weight_conv
+            wb = _wsign(p["w"], train) if binarize else p["w"]
+            h = _conv(h, wb, nd.stride, nd.pad, 0.0) * alpha_of(p["w"], (0, 1, 2))
+            conv_i += 1
+        elif isinstance(nd, Binarize):
+            if nd.flatten:
+                h = h.reshape(h.shape[0], -1)
+            h = act(h)
+        elif isinstance(nd, BinaryConv):
+            # validate() guarantees every BinaryConv is thresholded
+            p = params["conv"][conv_i]
+            wb = _wsign(p["w"], train) if binarize else p["w"]
+            s = _conv(h, wb, nd.stride, nd.pad, -1.0)
+            if binarize:  # alpha [F]: fold absorbs it
+                s = s * alpha_of(p["w"], (0, 1, 2))
+            y, new_bn["conv"][conv_i] = _batch_norm(
+                s, bn_state["conv"][conv_i], p, train, momentum
+            )
+            h = act_ge(y)
+            conv_i += 1
+        elif isinstance(nd, MaxPool):
+            h = _maxpool(h, nd.window, nd.stride)
+        elif isinstance(nd, BinaryDense):
+            if h.ndim > 2:
+                h = h.reshape(h.shape[0], -1)
+            p = params["fc"][fc_i]
+            wb = _wsign(p["w"], train) if binarize else p["w"]
+            s = h @ wb.T  # w [N, K]: rows are outputs
+            if spec.thresholded(nd):
+                if binarize:  # alpha [N] per output row, as bnn_dense_train
+                    s = s * alpha_of(p["w"], 1)
+                y, new_bn["fc"][fc_i] = _batch_norm(
+                    s, bn_state["fc"][fc_i], p, train, momentum
+                )
+                h = act_ge(y)
+            else:
+                # terminal layer: the raw pm1 dot, NO alpha — serving
+                # emits the int32 popcount dot as float logits verbatim
+                h = s
+            fc_i += 1
+        elif isinstance(nd, (BNThreshold, Logits)):
+            pass  # fused into the producer above
+        else:  # pragma: no cover
+            raise AssertionError(f"unknown node {nd!r}")
+    return h.astype(jnp.float32), new_bn

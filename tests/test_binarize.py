@@ -127,3 +127,86 @@ def test_binarize_weights_scale():
     np.testing.assert_allclose(np.asarray(alpha[:, 0]),
                                np.abs(np.asarray(w)).mean(axis=1), rtol=1e-6)
     assert set(np.unique(np.asarray(wb))) <= {-1.0, 1.0}
+
+
+# ------------------------------------------------------------------ #
+# STE gradient contract (the training loop rides on these)             #
+# ------------------------------------------------------------------ #
+def test_ste_gradient_finite_difference_inside_window():
+    """Inside |x| < 1 the STE backward is the clipped identity, so for
+    any smooth outer function f, grad(f . ste_sign) must equal f'
+    evaluated at sign(x) — the finite-difference derivative of the
+    surrogate f(clip(x, -1, 1) passed through identity)."""
+    xs = jnp.array([-0.9, -0.4, -0.05, 0.05, 0.3, 0.99])
+
+    def f(v):
+        return jnp.sum(jnp.sin(ste_sign(v)) * jnp.arange(1.0, 7.0))
+
+    got = jax.grad(f)(xs)
+    # STE surrogate: d/dx f(sign(x)) ~= f'(y)|_{y=sign(x)} * 1
+    want = jnp.cos(ste_sign(xs)) * jnp.arange(1.0, 7.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_ste_gradient_exactly_zero_outside_window():
+    xs = jnp.array([-100.0, -1.0001, 1.0001, 3.0, 100.0])
+    g = jax.grad(lambda v: ste_sign(v).sum())(xs)
+    np.testing.assert_array_equal(np.asarray(g), np.zeros(5))
+    # the boundary |x| = 1 is inside the window (<= 1)
+    gb = jax.grad(lambda v: ste_sign(v).sum())(jnp.array([-1.0, 1.0]))
+    np.testing.assert_array_equal(np.asarray(gb), [1.0, 1.0])
+
+
+def test_ste_composes_under_jit_vmap_grad():
+    """The custom_vjp must survive every transform the training step
+    stacks on top of it."""
+    xs = jnp.array([[-2.0, -0.5, 0.25], [0.75, 1.5, -0.1]])
+    gate = (jnp.abs(xs) <= 1.0).astype(jnp.float32)
+
+    def f(v):
+        return ste_sign(v).sum()
+
+    np.testing.assert_array_equal(np.asarray(jax.grad(f)(xs)),
+                                  np.asarray(gate))
+    np.testing.assert_array_equal(np.asarray(jax.jit(jax.grad(f))(xs)),
+                                  np.asarray(gate))
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(jax.grad(f))(xs)), np.asarray(gate))
+    # grad-of-vmap: per-row grads through a vmapped forward
+    def frow(row):
+        return ste_sign(row * 2.0).sum()
+
+    g = jax.grad(lambda m: jax.vmap(frow)(m).sum())(xs)
+    want = 2.0 * (jnp.abs(xs * 2.0) <= 1.0).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(want))
+
+
+def test_bnn_dense_train_gradients_nonzero_through_bn():
+    """The full train-layer reference must propagate useful gradients:
+    nonzero wrt both the input and the latent weights, and zero where
+    the STE window gates them off."""
+    rng = np.random.default_rng(11)
+    K, N, B = 32, 4, 6
+    x = jnp.asarray(rng.uniform(-0.9, 0.9, size=(B, K)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(-0.9, 0.9, size=(N, K)).astype(np.float32))
+    mu = np.zeros(N)
+    sigma = np.full(N, float(K))   # keeps BN output inside the window
+    gamma = np.ones(N)
+    beta = np.zeros(N)
+
+    rng_signs = jnp.asarray(rng.choice([-1.0, 1.0], size=(B, N)))
+
+    def loss(wv, xv):
+        return jnp.sum(bnn_dense_train(xv, wv, mu, sigma, gamma, beta)
+                       * rng_signs)
+    gw, gx = jax.grad(loss, argnums=(0, 1))(w, x)
+    assert float(jnp.sum(jnp.abs(gw))) > 0.0
+    assert float(jnp.sum(jnp.abs(gx))) > 0.0
+    assert np.all(np.isfinite(np.asarray(gw)))
+    assert np.all(np.isfinite(np.asarray(gx)))
+    # latent weights far outside the window get no gradient
+    w_sat = jnp.asarray(np.full((N, K), 5.0, dtype=np.float32))
+    gw_sat = jax.grad(loss, argnums=0)(w_sat, x)
+    np.testing.assert_array_equal(np.asarray(gw_sat),
+                                  np.zeros_like(gw_sat))

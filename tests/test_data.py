@@ -1,0 +1,158 @@
+"""The production data contract, for BOTH deterministic pipelines
+(token stream and synthetic images): every batch is a pure function of
+(seed, step, shard); resume-at-step-k reproduces the uninterrupted
+stream; re-sharding 1 -> 2 -> 4 repartitions the identical global
+batch.  Plus the image-specific properties the train->serve
+sign-identity gate depends on (no exact-zero pixels, recoverable
+labels) and the offline self-skip of the real-CIFAR loader."""
+import numpy as np
+import pytest
+
+from repro.data import (DataConfig, DataIterator, ImageDataConfig,
+                        ImageIterator, global_batch_at, image_batch_at,
+                        image_shard_batch_at, shard_batch_at)
+from repro.data.images import (EVAL_STEP_OFFSET, class_prototypes,
+                               eval_batch_at, load_cifar10)
+
+TOK = DataConfig(vocab_size=64, seq_len=8, global_batch=8, seed=3)
+IMG = ImageDataConfig(num_classes=4, height=6, width=6, channels=2,
+                      global_batch=8, seed=3)
+
+
+def _tok_at(step, shard=0, n_shards=1):
+    if n_shards == 1 and shard == 0:
+        return global_batch_at(TOK, step)
+    return shard_batch_at(TOK, step, shard, n_shards)
+
+
+def _img_at(step, shard=0, n_shards=1):
+    if n_shards == 1 and shard == 0:
+        return image_batch_at(IMG, step)
+    return image_shard_batch_at(IMG, step, shard, n_shards)
+
+
+@pytest.mark.parametrize("batch_at", [_tok_at, _img_at],
+                         ids=["tokens", "images"])
+def test_batch_is_pure_function_of_step(batch_at):
+    a = batch_at(7)
+    b = batch_at(7)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = batch_at(8)
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+
+
+@pytest.mark.parametrize("cfg_cls,cfg,it_cls,batch_at", [
+    (DataConfig, TOK, DataIterator, _tok_at),
+    (ImageDataConfig, IMG, ImageIterator, _img_at),
+], ids=["tokens", "images"])
+def test_resume_at_step_k_matches_uninterrupted(cfg_cls, cfg, it_cls,
+                                                batch_at):
+    base = it_cls(cfg)
+    full = [next(base) for _ in range(6)]
+    it = it_cls(cfg)
+    for _ in range(3):
+        next(it)
+    state = it.state_dict()
+    resumed = it_cls.from_state(cfg, state, shard=0, n_shards=1)
+    for step in range(3, 6):
+        got = next(resumed)
+        for k in got:
+            np.testing.assert_array_equal(got[k], full[step][k])
+
+
+@pytest.mark.parametrize("batch_at", [_tok_at, _img_at],
+                         ids=["tokens", "images"])
+def test_resharding_repartitions_identical_global_batch(batch_at):
+    ref = batch_at(5)
+    for n_shards in (1, 2, 4):
+        parts = [batch_at(5, shard, n_shards) for shard in range(n_shards)]
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.concatenate([p[k] for p in parts]), ref[k])
+
+
+def test_seed_changes_stream():
+    other = ImageDataConfig(num_classes=4, height=6, width=6, channels=2,
+                            global_batch=8, seed=4)
+    assert not np.array_equal(image_batch_at(IMG, 0)["image"],
+                              image_batch_at(other, 0)["image"])
+    assert not np.array_equal(
+        global_batch_at(TOK, 0)["tokens"],
+        global_batch_at(DataConfig(64, 8, 8, seed=4), 0)["tokens"])
+
+
+# ------------------------------------------------------------------ #
+# image-specific properties                                            #
+# ------------------------------------------------------------------ #
+def test_image_batch_shapes_labels_and_no_exact_zeros():
+    b = image_batch_at(IMG, 0)
+    assert b["image"].shape == (8, 6, 6, 2)
+    assert b["image"].dtype == np.float32
+    assert b["label"].shape == (8,)
+    assert b["label"].dtype == np.int32
+    # labels cycle sample % num_classes: balanced by construction
+    np.testing.assert_array_equal(b["label"], np.arange(8) % 4)
+    # the magnitude jitter keeps every pixel off exact zero (the
+    # strict x > 0 pack convention must never land on a tie)
+    lo = min(np.abs(image_batch_at(IMG, s)["image"]).min()
+             for s in range(4))
+    assert lo >= IMG.mag_lo * 0.99
+
+
+def test_image_labels_recoverable_from_prototypes():
+    """Separable by construction: nearest prototype (by sign
+    agreement) recovers the label despite flips and jitter."""
+    proto = class_prototypes(IMG).reshape(IMG.num_classes, -1)
+    b = image_batch_at(IMG, 2)
+    signs = np.sign(b["image"].reshape(b["image"].shape[0], -1))
+    pred = np.argmax(signs @ proto.T, axis=1)
+    assert np.mean(pred == b["label"]) == 1.0
+
+
+def test_eval_stream_disjoint_from_training():
+    ev = eval_batch_at(IMG, 0)
+    tr = image_batch_at(IMG, 0)
+    assert not np.array_equal(ev["image"], tr["image"])
+    np.testing.assert_array_equal(
+        ev["image"], image_batch_at(IMG, EVAL_STEP_OFFSET)["image"])
+
+
+def test_class_prototypes_deterministic_and_pm1():
+    p1 = class_prototypes(IMG)
+    p2 = class_prototypes(IMG)
+    np.testing.assert_array_equal(p1, p2)
+    assert set(np.unique(p1)) == {-1.0, 1.0}
+    # distinct classes get distinct patterns
+    flat = p1.reshape(IMG.num_classes, -1)
+    for i in range(IMG.num_classes):
+        for j in range(i + 1, IMG.num_classes):
+            assert not np.array_equal(flat[i], flat[j])
+
+
+def test_load_cifar10_self_skips_offline(tmp_path, monkeypatch):
+    monkeypatch.delenv("CIFAR10_DIR", raising=False)
+    assert load_cifar10() is None                  # no root configured
+    assert load_cifar10(str(tmp_path)) is None     # root without batches
+
+
+def test_load_cifar10_reads_pickle_batches(tmp_path):
+    """Synthesize the standard pickle layout; the loader must return
+    NHWC float32 in [-1, 1] with int32 labels."""
+    import pickle
+
+    rng = np.random.default_rng(0)
+    n = 4
+    for i in range(1, 6):
+        d = {b"data": rng.integers(0, 256, size=(n, 3072), dtype=np.uint8),
+             b"labels": list(rng.integers(0, 10, size=n))}
+        with open(tmp_path / f"data_batch_{i}", "wb") as f:
+            pickle.dump(d, f)
+    got = load_cifar10(str(tmp_path), split="train")
+    assert got is not None
+    assert got["image"].shape == (5 * n, 32, 32, 3)
+    assert got["image"].dtype == np.float32
+    assert got["image"].min() >= -1.0 and got["image"].max() <= 1.0
+    assert got["label"].shape == (5 * n,)
+    assert got["label"].dtype == np.int32
+    assert load_cifar10(str(tmp_path), split="test") is None  # no test_batch

@@ -1,0 +1,146 @@
+"""optim/adamw.py vs a hand-rolled NumPy reference: bias correction,
+decoupled weight decay, global-norm clipping, the latent [-1, 1]
+clamp (and its clip_mask escape hatch), and schedule edge cases."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+
+
+def _np_schedule(cfg, step):
+    step = float(step)
+    warm = min(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = np.clip((step - cfg.warmup_steps)
+                   / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) \
+        * 0.5 * (1 + np.cos(np.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def _np_adamw_step(params, m, v, grads, step, cfg, clip_mask=None):
+    """One reference AdamW step on flat dicts of float64 arrays."""
+    gn = np.sqrt(sum(np.sum(np.square(g)) for g in grads.values()))
+    scale = min(1.0, cfg.clip_norm / max(gn, 1e-12))
+    grads = {k: g * scale for k, g in grads.items()}
+    lr = _np_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step
+    b2c = 1.0 - cfg.b2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_m[k] = cfg.b1 * m[k] + (1 - cfg.b1) * grads[k]
+        new_v[k] = cfg.b2 * v[k] + (1 - cfg.b2) * grads[k] ** 2
+        mh = new_m[k] / b1c
+        vh = new_v[k] / b2c
+        delta = mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * params[k]
+        p = params[k] - lr * delta
+        if cfg.clip_latent and (clip_mask is None or clip_mask[k]):
+            p = np.clip(p, -1.0, 1.0)
+        new_p[k] = p
+    return new_p, new_m, new_v, gn
+
+
+def _rand_tree(rng, scale=1.0):
+    return {"w": rng.normal(size=(4, 6)).astype(np.float32) * scale,
+            "b": rng.normal(size=(6,)).astype(np.float32) * scale}
+
+
+def test_apply_updates_matches_numpy_reference():
+    """Five steps of the real optimizer vs the float64 reference:
+    bias correction, decoupled decay, clipping, and the clamp all in
+    play (weights scaled so the clamp actually binds)."""
+    rng = np.random.default_rng(0)
+    cfg = adamw.AdamWConfig(lr=0.1, b1=0.9, b2=0.95, eps=1e-8,
+                            weight_decay=0.1, clip_norm=1.0,
+                            warmup_steps=2, total_steps=10)
+    params = _rand_tree(rng)
+    ref_p = {k: v.astype(np.float64) for k, v in params.items()}
+    ref_m = {k: np.zeros_like(v) for k, v in ref_p.items()}
+    ref_v = {k: np.zeros_like(v) for k, v in ref_p.items()}
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    opt = adamw.init(jp)
+    for step in range(1, 6):
+        grads = _rand_tree(rng, scale=2.0)   # norm > clip_norm: clips
+        jg = {k: jnp.asarray(v) for k, v in grads.items()}
+        jp, opt, metrics = adamw.apply_updates(jp, opt, jg, cfg)
+        ref_p, ref_m, ref_v, gn = _np_adamw_step(
+            ref_p, ref_m, ref_v,
+            {k: v.astype(np.float64) for k, v in grads.items()},
+            step, cfg)
+        assert int(opt.step) == step
+        np.testing.assert_allclose(float(metrics["grad_norm"]), gn,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(metrics["lr"]),
+                                   _np_schedule(cfg, step), rtol=1e-6)
+        for k in jp:
+            np.testing.assert_allclose(np.asarray(jp[k]), ref_p[k],
+                                       rtol=2e-5, atol=2e-6)
+            np.testing.assert_allclose(np.asarray(opt.m[k]), ref_m[k],
+                                       rtol=2e-5, atol=2e-6)
+            np.testing.assert_allclose(np.asarray(opt.v[k]), ref_v[k],
+                                       rtol=2e-5, atol=1e-7)
+
+
+def test_global_norm_clipping_exact():
+    grads = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), 3.0)}
+    gn = float(adamw.global_norm(grads))
+    np.testing.assert_allclose(gn, np.sqrt(3 * 16 + 4 * 9), rtol=1e-6)
+    clipped, got_gn = adamw.clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(got_gn), gn, rtol=1e-6)
+    np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+    # under the max norm: untouched
+    same, _ = adamw.clip_by_global_norm(grads, gn + 1.0)
+    for k in grads:
+        np.testing.assert_array_equal(np.asarray(same[k]),
+                                      np.asarray(grads[k]))
+
+
+def test_latent_clamp_and_clip_mask():
+    """clip_latent clamps every leaf to [-1, 1]; a clip_mask exempts
+    the BN-style leaves (they must be free to leave the clamp)."""
+    cfg = adamw.AdamWConfig(lr=1.0, weight_decay=0.0, clip_norm=1e9,
+                            warmup_steps=0, total_steps=10,
+                            min_lr_frac=1.0)
+    params = {"w": jnp.asarray([0.9, -0.9]),
+              "gamma": jnp.asarray([0.95, 0.95])}
+    grads = {"w": jnp.asarray([-5.0, 5.0]),
+             "gamma": jnp.asarray([-5.0, -5.0])}
+    p1, _, _ = adamw.apply_updates(params, adamw.init(params), grads, cfg)
+    assert np.all(np.abs(np.asarray(p1["w"])) <= 1.0)
+    assert np.all(np.abs(np.asarray(p1["gamma"])) <= 1.0)
+    mask = {"w": True, "gamma": False}
+    p2, _, _ = adamw.apply_updates(params, adamw.init(params), grads, cfg,
+                                   clip_mask=mask)
+    assert np.all(np.abs(np.asarray(p2["w"])) <= 1.0)
+    assert np.any(np.asarray(p2["gamma"]) > 1.0)   # escaped the clamp
+    # clip_latent=False: nothing clamps even without a mask
+    cfg_off = adamw.AdamWConfig(lr=1.0, weight_decay=0.0, clip_norm=1e9,
+                                warmup_steps=0, total_steps=10,
+                                min_lr_frac=1.0, clip_latent=False)
+    p3, _, _ = adamw.apply_updates(params, adamw.init(params), grads,
+                                   cfg_off)
+    assert np.any(np.abs(np.asarray(p3["w"])) > 1.0)
+
+
+@pytest.mark.parametrize("warmup,total", [(0, 10), (5, 5), (0, 1)])
+def test_schedule_edge_cases(warmup, total):
+    """warmup_steps=0 and total_steps == warmup_steps must not divide
+    by zero, go negative, or exceed lr."""
+    cfg = adamw.AdamWConfig(lr=0.5, warmup_steps=warmup,
+                            total_steps=total, min_lr_frac=0.1)
+    for step in range(0, total + 3):
+        lr = float(adamw.schedule(cfg, jnp.asarray(step)))
+        assert np.isfinite(lr)
+        assert 0.0 < lr <= cfg.lr + 1e-9
+        np.testing.assert_allclose(lr, _np_schedule(cfg, step), rtol=1e-6)
+    # beyond the horizon the cosine floors at min_lr_frac * lr
+    tail = float(adamw.schedule(cfg, jnp.asarray(total + 100)))
+    np.testing.assert_allclose(tail, cfg.lr * cfg.min_lr_frac, rtol=1e-5)
+
+
+def test_schedule_warmup_ramp_monotonic():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.0)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in range(10)]
+    assert all(b > a for a, b in zip(lrs, lrs[1:]))

@@ -1,0 +1,139 @@
+"""The train->fold->compile->serve loop (DESIGN.md §12): fit() learns,
+checkpoint resume is bit-identical to an uninterrupted run, and the
+folded packed serving forward is sign-identical to the training eval
+forward — including end-to-end through BNNServer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import graph, train
+from repro.checkpoint import restore, save
+from repro.data import ImageDataConfig
+from repro.data.images import eval_batch_at
+from repro.graph.ir import (Binarize, BinaryConv, BinaryDense, BNNSpec,
+                            BNThreshold, IntegerEntry, Logits, MaxPool)
+from repro.serving import BNNServer
+from repro.train.models import clip_mask_for, init_train_state
+
+# tiny everything: this file must stay cheap on a 1-core host
+DCFG = ImageDataConfig(num_classes=4, height=4, width=4, channels=2,
+                       global_batch=16, seed=1, flip_prob=0.02)
+MLP = graph.from_dense_stack(DCFG.n_pixels, [64, DCFG.num_classes],
+                             logits=True, name="t-mlp")
+
+
+def _conv_spec():
+    return BNNSpec(
+        name="t-conv", input_shape=(4, 4, 2),
+        nodes=(IntegerEntry("c0", 3, 3, 2, 8, 4, 4, 4, 4, stride=1, pad=1),
+               Binarize("b0"),
+               BinaryConv("c1", 3, 3, 8, 32, 4, 4, 4, 4, stride=1, pad=1),
+               BNThreshold("t1", channels=32),
+               MaxPool("p1", window=2, stride=2),
+               BinaryDense("fc", n_in=2 * 2 * 32, n_out=DCFG.num_classes),
+               Logits("out", classes=DCFG.num_classes)))
+
+
+def _leaves_equal(a, b):
+    fa, ta = jax.tree.flatten(a)
+    fb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fit_learns_the_separable_task():
+    out = train.fit(MLP, DCFG, train.TrainConfig(steps=30, lr=0.05),
+                    log_fn=lambda *_: None)
+    assert len(out["losses"]) == 30
+    assert out["losses"][-1] < out["losses"][0]
+    ev = train.evaluate(MLP, out["params"], out["bn"], DCFG, n_batches=2)
+    assert ev["acc"] > 0.5   # chance is 0.25; this task trains to ~1.0
+
+
+def test_resume_is_bit_identical_to_uninterrupted(tmp_path):
+    """Kill at step 4, restore(), continue: the loss trajectory AND the
+    final (params, bn, opt) must match the uninterrupted run exactly."""
+    tcfg = train.TrainConfig(steps=8, lr=0.05, ckpt_every=3,
+                             log_every=100)
+    full = train.fit(MLP, DCFG, tcfg, log_fn=lambda *_: None)
+
+    d = str(tmp_path / "ckpt")
+    part1 = train.fit(MLP, DCFG, tcfg, ckpt_dir=d, run_steps=4,
+                      log_fn=lambda *_: None)
+    assert part1["step"] == 4
+    np.testing.assert_array_equal(part1["losses"], full["losses"][:4])
+    part2 = train.fit(MLP, DCFG, tcfg, ckpt_dir=d,
+                      log_fn=lambda *_: None)
+    assert part2["step"] == 8
+    # the continued trajectory is bit-identical, not merely close
+    np.testing.assert_array_equal(part2["losses"], full["losses"][4:])
+    _leaves_equal(part2["params"], full["params"])
+    _leaves_equal(part2["bn"], full["bn"])
+    _leaves_equal(part2["opt"], full["opt"])
+
+
+def test_checkpoint_roundtrip_exact(tmp_path):
+    """(params, bn) through the sha256-verified checkpointer come back
+    bit-identical, template-shaped."""
+    params, bn = init_train_state(jax.random.PRNGKey(0), MLP)
+    save(str(tmp_path), 7, (params, bn), extra={"step": 7})
+    (p2, b2), meta = restore(str(tmp_path), (params, bn))
+    assert meta["extra"]["step"] == 7
+    _leaves_equal(p2, params)
+    _leaves_equal(b2, bn)
+
+
+def test_clip_mask_shapes():
+    """w leaves clamp; BN gamma/beta escape (they fold into integer
+    thresholds and must be free to grow past |1|)."""
+    spec = _conv_spec()
+    params, _ = init_train_state(jax.random.PRNGKey(0), spec)
+    mask = clip_mask_for(params)
+    assert jax.tree.structure(mask) == jax.tree.structure(
+        jax.tree.map(lambda _: True, params))
+    assert mask["conv"][1]["w"] is True
+    assert mask["conv"][1]["gamma"] is False
+    assert mask["conv"][1]["beta"] is False
+    assert mask["fc"][0]["w"] is True
+
+
+@pytest.mark.parametrize("spec_fn", [lambda: MLP, _conv_spec],
+                         ids=["mlp", "conv"])
+def test_sign_identity_and_server_roundtrip(spec_fn):
+    """After a short training run, fold + compile + serve: logits
+    EXACTLY equal the training eval forward, through CompiledBNN.apply
+    (check_sign_identity) and through BNNServer.apply_batch."""
+    spec = spec_fn()
+    steps = 6
+    out = train.fit(spec, DCFG, train.TrainConfig(steps=steps, lr=0.05),
+                    log_fn=lambda *_: None)
+    x = eval_batch_at(DCFG, 0)["image"]
+    if len(spec.input_shape) == 1:
+        x = x.reshape(x.shape[0], -1)
+    stats = train.check_sign_identity(spec, out["params"], out["bn"], x)
+    assert stats["argmax_agreement"] == 1.0
+    assert stats["max_abs_logit_delta"] == 0.0
+
+    cb, sparams = train.export_compiled(spec, out["params"], out["bn"],
+                                        batch=x.shape[0])
+    server = BNNServer(cb, sparams, max_batch=x.shape[0])
+    eval_logits, _ = train.train_forward(spec, out["params"], out["bn"],
+                                         jnp.asarray(x), train=False)
+    from repro.train.export import _serving_input
+    served = server.apply_batch(_serving_input(spec, x, cb.backend))
+    np.testing.assert_array_equal(
+        np.asarray(served, dtype=np.float32),
+        np.asarray(eval_logits, dtype=np.float32))
+
+
+def test_latent_twin_runs_and_scores():
+    """binarize=False (fp32-latent tanh twin) shares the graph; it is
+    the ceiling for the BENCH_train binarization gap."""
+    out = train.fit(MLP, DCFG, train.TrainConfig(steps=10, lr=0.05),
+                    log_fn=lambda *_: None)
+    ev = train.evaluate(MLP, out["params"], out["bn"], DCFG, n_batches=1,
+                        binarize=False)
+    assert np.isfinite(ev["loss"])
+    assert 0.0 <= ev["acc"] <= 1.0

@@ -13,6 +13,11 @@ Faults artifacts (BENCH_faults*.json, ISSUE 7) carry the SEU /
 threshold-noise curves and the chaos recovery row; their recovery
 invariants (zero lost futures, poison isolation, bit-identical
 fallback) are enforced unconditionally — on smoke and full runs alike.
+Train artifacts (BENCH_train*.json, ISSUE 8) carry the closed
+train->fold->compile->serve loop; the bit-consistency invariants
+(folded serving forward EXACTLY equals the training eval forward,
+including through BNNServer, checkpoint round-trip exact) and the
+eval-accuracy-beats-chance-by-margin gate are likewise unconditional.
 
 ``--gate`` additionally enforces the full-run perf acceptance criteria
 on a tracked (non-smoke) serve artifact:
@@ -60,6 +65,19 @@ CHAOS_KEYS = ("requests", "zero_lost_futures", "poison_isolated",
 # alike, so check_faults enforces them unconditionally (no --gate).
 CHAOS_INVARIANTS = ("zero_lost_futures", "poison_isolated",
                     "fallback_bit_identical")
+TRAIN_TOP = ("env", "smoke", "models")
+TRAIN_MODEL_KEYS = ("name", "steps", "global_batch", "num_classes",
+                    "chance", "margin", "first_train_loss",
+                    "final_train_loss", "loss_curve", "train_acc_final",
+                    "eval_acc", "eval_loss", "eval_rows",
+                    "latent_eval_acc", "binarization_gap",
+                    "fold_bit_consistent", "serve_bit_consistent",
+                    "ckpt_roundtrip_exact", "sign_identity_rows",
+                    "wall_train_s", "steps_per_s")
+# The train->fold->compile->serve contract (ISSUE 8): bit-consistency
+# and the learning gate hold on smoke and full artifacts alike.
+TRAIN_INVARIANTS = ("fold_bit_consistent", "serve_bit_consistent",
+                    "ckpt_roundtrip_exact")
 
 
 def _missing(obj, keys, where):
@@ -154,6 +172,47 @@ def check_faults(doc, path):
     return errs
 
 
+def check_train(doc, path):
+    """BENCH_train*.json (ISSUE 8): the closed training loop.  The
+    bit-consistency invariants and the accuracy-beats-chance gate are
+    enforced unconditionally — a training artifact whose folded serving
+    forward diverged, or whose model never learned the separable
+    synthetic task, is a broken artifact on any run size."""
+    errs = _missing(doc, TRAIN_TOP, path)
+    if errs:
+        return errs
+    models = doc["models"]
+    if not isinstance(models, list) or not models:
+        return [f"{path}: 'models' must be a non-empty list"]
+    for i, row in enumerate(models):
+        where = f"{path}: models[{i}]"
+        errs += _missing(row, TRAIN_MODEL_KEYS, where)
+        errs += _positive(row, TRAIN_MODEL_KEYS, where)
+        for k in TRAIN_INVARIANTS:
+            if k in row and row[k] is not True:
+                errs.append(f"{where}: {k} = {row[k]} — the "
+                            f"train->serve contract is violated")
+        acc, chance, margin = (row.get("eval_acc"), row.get("chance"),
+                               row.get("margin"))
+        if isinstance(acc, (int, float)) and \
+                isinstance(chance, (int, float)) and \
+                isinstance(margin, (int, float)) and \
+                acc <= chance + margin:
+            errs.append(f"{where}: eval_acc = {acc:.3f} does not beat "
+                        f"chance {chance:.2f} + margin {margin:.2f}")
+        fl, ll = row.get("first_train_loss"), row.get("final_train_loss")
+        if isinstance(fl, (int, float)) and isinstance(ll, (int, float)) \
+                and ll >= fl:
+            errs.append(f"{where}: final_train_loss {ll:.4f} did not "
+                        f"improve on first_train_loss {fl:.4f}")
+        curve = row.get("loss_curve")
+        if curve is not None and (not isinstance(curve, list) or
+                                  len(curve) < 2):
+            errs.append(f"{where}: loss_curve must be a list of >= 2 "
+                        f"points")
+    return errs
+
+
 def gate_serve(doc, path):
     """The full-run perf acceptance criteria (never applied to smoke
     artifacts: smoke shapes only measure dispatch overhead)."""
@@ -185,6 +244,7 @@ def check_file(path, gate=False):
     errs = check_env(doc, path)
     is_serve = "throughput" in doc or "scaling" in doc
     is_faults = "seu" in doc and "chaos" in doc
+    is_train = "models" in doc
     if is_serve:
         errs += check_serve(doc, path)
         if gate and not errs:
@@ -194,6 +254,11 @@ def check_file(path, gate=False):
         if gate:
             errs.append(f"{path}: --gate only applies to serve "
                         f"artifacts (faults invariants are always on)")
+    elif is_train:
+        errs += check_train(doc, path)
+        if gate:
+            errs.append(f"{path}: --gate only applies to serve "
+                        f"artifacts (train invariants are always on)")
     elif gate:
         errs.append(f"{path}: --gate only applies to serve artifacts")
     return errs
