@@ -1,0 +1,46 @@
+"""Static analysis for the software ASIC (DESIGN.md §13).
+
+Two halves:
+
+* :mod:`repro.analysis.lint` + :mod:`repro.analysis.rules` — the
+  dependency-free AST contract linter (``python -m repro.analysis
+  --gate``).  Importing ``repro.analysis`` pulls in only stdlib.
+* :mod:`repro.analysis.jaxpr_audit` — the jaxpr/plan auditor behind
+  ``CompiledBNN.audit()``.  It needs jax, so it is loaded lazily via
+  module ``__getattr__``; the gate never touches it.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.analysis.lint import (
+    Finding,
+    LintRun,
+    Module,
+    Rule,
+    lint_files,
+    lint_paths,
+    repo_root,
+)
+
+__all__ = [
+    "Finding",
+    "LintRun",
+    "Module",
+    "Rule",
+    "audit_compiled",
+    "lint_files",
+    "lint_paths",
+    "repo_root",
+]
+
+
+def __getattr__(name: str) -> Any:
+    if name in ("audit_compiled", "jaxpr_audit", "AuditReport", "AuditError"):
+        from repro.analysis import jaxpr_audit
+
+        if name == "jaxpr_audit":
+            return jaxpr_audit
+        return getattr(jaxpr_audit, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

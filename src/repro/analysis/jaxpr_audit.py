@@ -1,0 +1,417 @@
+"""The jaxpr/plan auditor: dynamic design-rule checking of a compiled
+artifact (DESIGN.md §13).
+
+The AST linter (:mod:`repro.analysis.lint`) proves the *source* keeps
+its contracts; this module proves the *compiled executable* does, by
+walking the jaxpr of ``CompiledBNN.apply`` and re-deriving the plan's
+own geometry claims:
+
+* **int32-escape** — no int32 activation the unfused legacy chain
+  would have written to HBM (NHWC conv planes, flattened ``[M, N]``
+  dense activations, or their padded launches) exists anywhere in the
+  traced jaxpr.  Kernel backends only: the xla reference path
+  legitimately materializes them and relies on XLA fusion.
+* **plan-vmem** — every fused_stack / direct-conv step still fits the
+  VMEM budget it claimed when the plan re-derives at the audited batch
+  (``stack_plan`` / ``plan_conv_launch``, THE shared residency rules).
+* **donation** — ``serving_jit_kwargs`` donates exactly the batch
+  input (argnum 1, the server-owned staging buffer) and never the
+  replicated params; ``valid_rows`` stays static.
+* **trace-bound** — the prewarm key set over the full bucketed
+  dispatch grid stays within ``trace_bound(max_batch, ragged=True)``
+  keys per launch.
+
+``CompiledBNN.audit()`` is the front door; tests migrate their
+hand-rolled jaxpr walkers onto :func:`iter_eqns` / :func:`eqn_shapes`
+so the walking logic exists exactly once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels.fused_mlp import stack_plan
+from repro.kernels.packed import VMEM_BUDGET_BYTES, get_backend
+from repro.serving.bucketing import dispatch_grid, trace_bound
+
+__all__ = [
+    "AuditCheck",
+    "AuditError",
+    "AuditReport",
+    "audit_compiled",
+    "banned_int32_shapes",
+    "eqn_shapes",
+    "iter_eqns",
+]
+
+
+class AuditError(AssertionError):
+    """A compiled artifact violated a DESIGN.md contract."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditCheck:
+    """One audited contract: ``ok`` is the verdict, ``skipped`` marks
+    checks the backend makes inapplicable (still ok)."""
+
+    name: str
+    ok: bool
+    detail: str
+    skipped: bool = False
+
+    def format(self) -> str:
+        mark = "SKIP" if self.skipped else ("ok" if self.ok else "FAIL")
+        return f"[{mark:>4s}] {self.name}: {self.detail}"
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditReport:
+    """audit_compiled's result: per-check verdicts + the traced facts."""
+
+    spec_name: str
+    backend: str
+    batch: int
+    checks: Tuple[AuditCheck, ...]
+    int32_shapes: "frozenset[tuple]"
+    banned_shapes: "frozenset[tuple]"
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.checks)
+
+    def failures(self) -> List[AuditCheck]:
+        return [c for c in self.checks if not c.ok]
+
+    def format(self) -> str:
+        head = (
+            f"audit {self.spec_name} (backend {self.backend}, "
+            f"batch {self.batch}): "
+            f"{'PASS' if self.ok else 'FAIL'}"
+        )
+        return "\n".join([head] + [f"  {c.format()}" for c in self.checks])
+
+    def raise_if_failed(self) -> "AuditReport":
+        if not self.ok:
+            raise AuditError(self.format())
+        return self
+
+
+# ------------------------------------------------------------------ #
+# the shared jaxpr-walking library (tests build on these two)          #
+# ------------------------------------------------------------------ #
+def iter_eqns(jaxpr: Any) -> Iterator[Any]:
+    """Every eqn in a jaxpr, recursing into sub-jaxprs (pallas_call
+    kernel bodies, scan/cond branches, pjit bodies)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else (val,)
+            for v in vals:
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    yield from iter_eqns(inner)
+
+
+def eqn_shapes(fn: Any, *args: Any, dtype: Any = jnp.int32) -> Set[tuple]:
+    """All eqn-output shapes of ``dtype`` anywhere in ``fn``'s jaxpr
+    (kernel jaxprs included) — the one detector every int32-escape and
+    routing regression shares."""
+    closed = jax.make_jaxpr(fn)(*args)
+    shapes: Set[tuple] = set()
+    for eqn in iter_eqns(closed.jaxpr):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and getattr(aval, "dtype", None) == dtype:
+                shapes.add(tuple(aval.shape))
+    return shapes
+
+
+# ------------------------------------------------------------------ #
+# deriving what must NOT exist from the plan itself                    #
+# ------------------------------------------------------------------ #
+def _dense_pairs(spec: Any) -> List[Tuple[Any, Any]]:
+    """fc-index-ordered (BinaryDense, following BNThreshold or None)
+    pairs — the pairing build_plan walked (graph/passes.py)."""
+    from repro.graph.passes import _dense_thresholds
+
+    return _dense_thresholds(spec)
+
+
+def banned_int32_shapes(compiled: Any, batch: int) -> Set[tuple]:
+    """The int32 activation shapes the *unfused* legacy chain would
+    write to HBM under this plan at ``batch`` rows — NHWC conv planes
+    (logical and N-padded), their batch-major [B, M, N] twins, and
+    every thresholded dense/fused-stack activation.  None of these may
+    appear in the compiled jaxpr on a kernel backend.
+
+    Deliberately NOT banned: fully-flattened 2-D forms ([B*M, N] conv
+    patches, padded [Mp, Np] dense launches) — across a whole net those
+    shapes can coincide with a *different* launch's legitimate
+    in-kernel [bm, bn] VMEM block (interpret mode inlines kernel
+    bodies into the jaxpr), so banning them is unsound here.  The
+    single-kernel regressions in tests/test_fused.py and
+    tests/test_conv.py keep the stricter per-launch sets, where no
+    other launch can collide."""
+    spec = compiled.spec
+    kb = get_backend(compiled.backend)
+    if not kb.uses_kernels:
+        kb = get_backend("pallas")
+    pairs = _dense_pairs(spec)
+    conv_nodes = spec.conv_nodes
+    banned: Set[tuple] = set()
+    for step in compiled.plan:
+        if step.kind == "binary_conv":
+            nd = conv_nodes[step.args["conv_idx"]]
+            m = nd.h_out * nd.w_out
+            for f in {nd.c_out, kb.pad_n(nd.c_out)}:
+                banned.add((batch, nd.h_out, nd.w_out, f))
+                banned.add((batch, m, f))
+        elif step.kind == "dense" and step.args["pack_out"]:
+            nd, _ = pairs[step.args["fc_idx"]]
+            banned.add((batch, nd.n_out))
+        elif step.kind == "fused_stack":
+            for j in step.args["fc_indices"]:
+                nd, _ = pairs[j]
+                banned.add((batch, nd.n_out))
+    return banned
+
+
+def _sample_inputs(compiled: Any, batch: int) -> Tuple[Dict[str, Any], Any]:
+    """Deterministic (params, x) at ``batch`` rows for tracing: float
+    NHWC for image specs, a packed [batch, K0] input for dense-entry
+    specs — the same domains ``apply`` declares."""
+    params = compiled.init(jax.random.PRNGKey(0))
+    shape = compiled.spec.input_shape
+    if len(shape) == 3:
+        x: Any = jax.random.normal(
+            jax.random.PRNGKey(1), (batch, *shape), jnp.float32
+        )
+    else:
+        x = kops.binarize_pack(
+            jax.random.normal(jax.random.PRNGKey(1), (batch, shape[0])),
+            backend=compiled.backend,
+        )
+    return params, x
+
+
+# ------------------------------------------------------------------ #
+# the checks                                                           #
+# ------------------------------------------------------------------ #
+def _check_int32_escape(
+    compiled: Any, params: Any, x: Any, batch: int
+) -> Tuple[AuditCheck, "frozenset[tuple]", "frozenset[tuple]"]:
+    be = get_backend(compiled.backend)
+    if not be.uses_kernels:
+        return (
+            AuditCheck(
+                "int32-escape",
+                True,
+                f"skipped on backend {be.name!r}: the reference path "
+                f"materializes int32 activations and relies on XLA "
+                f"fusion (kernel backends are the HBM contract)",
+                skipped=True,
+            ),
+            frozenset(),
+            frozenset(),
+        )
+    banned = frozenset(banned_int32_shapes(compiled, batch))
+    seen = frozenset(
+        eqn_shapes(
+            lambda p, a: compiled.apply(p, a), params, x, dtype=jnp.int32
+        )
+    )
+    leaked = sorted(banned & seen)
+    if leaked:
+        return (
+            AuditCheck(
+                "int32-escape",
+                False,
+                f"int32 activation(s) {leaked} escape to HBM — the "
+                f"threshold->pack epilogue is not fused (DESIGN.md §6)",
+            ),
+            seen,
+            banned,
+        )
+    return (
+        AuditCheck(
+            "int32-escape",
+            True,
+            f"none of {len(banned)} banned activation shapes in the "
+            f"jaxpr ({len(seen)} int32 eqn outputs total)",
+        ),
+        seen,
+        banned,
+    )
+
+
+def _check_plan_vmem(compiled: Any, batch: int) -> AuditCheck:
+    budget = (
+        VMEM_BUDGET_BYTES
+        if compiled.vmem_budget is None
+        else compiled.vmem_budget
+    )
+    pairs = _dense_pairs(compiled.spec)
+    conv_nodes = compiled.spec.conv_nodes
+    problems: List[str] = []
+    audited = 0
+    for step in compiled.plan:
+        if step.kind == "fused_stack":
+            nds = [pairs[j] for j in step.args["fc_indices"]]
+            sp = stack_plan(
+                batch,
+                nds[0][0].n_in,
+                [nd.n_out for nd, _ in nds],
+                [t.per_channel for _, t in nds],
+                backend=compiled.backend,
+                budget=budget,
+            )
+            audited += 1
+            if not sp["fits"]:
+                problems.append(
+                    f"{step.name}: fused stack claims residency but "
+                    f"needs {sp['vmem_bytes']} bytes > budget {budget} "
+                    f"at batch {batch}"
+                )
+        elif step.kind == "binary_conv" and "forced" not in step.detail:
+            nd = conv_nodes[step.args["conv_idx"]]
+            d = kops.plan_conv_launch(
+                nd.h_in,
+                nd.w_in,
+                nd.c_in,
+                nd.c_out,
+                nd.kh,
+                nd.kw,
+                stride=step.args["stride"],
+                padding=step.args["pad"],
+                backend=compiled.backend,
+                pack_out=True,
+                impl="auto",
+                vmem_budget=budget,
+                nb=batch,
+            )
+            audited += 1
+            if d["impl"] != step.args["impl"]:
+                problems.append(
+                    f"{step.name}: plan recorded impl="
+                    f"{step.args['impl']!r} but the shared VMEM rule "
+                    f"resolves {d['impl']!r} at batch {batch}"
+                )
+            elif d["impl"] == "direct" and d["vmem_bytes"] > budget:
+                problems.append(
+                    f"{step.name}: direct conv footprint "
+                    f"{d['vmem_bytes']} bytes exceeds budget {budget}"
+                )
+    if problems:
+        return AuditCheck("plan-vmem", False, "; ".join(problems))
+    return AuditCheck(
+        "plan-vmem",
+        True,
+        f"{audited} residency decision(s) re-derived under budget "
+        f"{budget} at batch {batch}",
+    )
+
+
+def _check_donation(compiled: Any) -> AuditCheck:
+    kw = compiled.serving_jit_kwargs(donate=True)
+    donated = tuple(kw.get("donate_argnums", ()))
+    statics = tuple(kw.get("static_argnames", ()))
+    plain = compiled.serving_jit_kwargs(donate=False)
+    problems: List[str] = []
+    if donated != (1,):
+        problems.append(
+            f"donate_argnums={donated!r} — only the server-owned "
+            f"batch input (argnum 1) may be donated"
+        )
+    if 0 in donated:
+        problems.append("params (argnum 0) donated — they are replicated")
+    if "valid_rows" not in statics:
+        problems.append(
+            "valid_rows not static — launch shapes would retrace per value"
+        )
+    if "donate_argnums" in plain:
+        problems.append("donate=False still donates")
+    if problems:
+        return AuditCheck("donation", False, "; ".join(problems))
+    return AuditCheck(
+        "donation",
+        True,
+        "donates exactly the batch input; params never; "
+        "valid_rows static",
+    )
+
+
+def _check_trace_bound(compiled: Any, max_batch: int) -> AuditCheck:
+    grid = dispatch_grid(max_batch)
+    bound = trace_bound(max_batch, ragged=True)
+    launches = max(1, compiled.launch_count())
+    if len(grid) > bound:
+        return AuditCheck(
+            "trace-bound",
+            False,
+            f"dispatch grid has {len(grid)} (bucket, valid) levels > "
+            f"trace_bound {bound}",
+        )
+    keys = compiled.tuning_keys_for_batches(
+        sorted({v for _, v in grid})
+    )
+    if len(keys) > bound * launches:
+        return AuditCheck(
+            "trace-bound",
+            False,
+            f"{len(keys)} prewarm keys exceed trace_bound {bound} x "
+            f"{launches} launches — a launch retraces per request "
+            f"shape instead of per bucket level",
+        )
+    return AuditCheck(
+        "trace-bound",
+        True,
+        f"{len(keys)} prewarm keys cover {len(grid)} dispatch levels "
+        f"(bound {bound} x {launches} launches) at max_batch {max_batch}",
+    )
+
+
+def audit_compiled(
+    compiled: Any,
+    params: Optional[Dict[str, Any]] = None,
+    x: Any = None,
+    batch: Optional[int] = None,
+    max_batch: int = 64,
+) -> AuditReport:
+    """Run every dynamic contract check against a CompiledBNN.
+
+    ``params``/``x`` default to deterministic samples shaped from the
+    spec; ``batch`` defaults to ``max(2, compiled.batch)`` so logical
+    activation shapes cannot collide with per-sample kernel blocks;
+    ``max_batch`` scopes the trace-bound/prewarm check.  Returns the
+    report — ``CompiledBNN.audit()`` raises on failure.
+    """
+    if x is not None:
+        batch = int(x.words.shape[0] if hasattr(x, "words") else x.shape[0])
+    elif batch is None:
+        batch = max(2, compiled.batch)
+    if x is None:
+        sample_params, x = _sample_inputs(compiled, batch)
+        if params is None:
+            params = sample_params
+    elif params is None:
+        params = compiled.init(jax.random.PRNGKey(0))
+    escape, seen, banned = _check_int32_escape(compiled, params, x, batch)
+    checks = (
+        escape,
+        _check_plan_vmem(compiled, batch),
+        _check_donation(compiled),
+        _check_trace_bound(compiled, max_batch),
+    )
+    return AuditReport(
+        spec_name=compiled.spec.name,
+        backend=compiled.backend or kops.default_backend(),
+        batch=batch,
+        checks=checks,
+        int32_shapes=seen,
+        banned_shapes=banned,
+    )

@@ -1,0 +1,29 @@
+"""The RPL rule catalog (DESIGN.md §13).
+
+Each module contributes a ``RULES`` list; this package concatenates
+them into ``ALL_RULES`` sorted by rule id and guarantees ids are
+unique — a rule number is a stable citation (tests, DESIGN.md, CI
+logs all refer to ``RPL###``), so two rules may never share one.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.lint import Rule
+from repro.analysis.rules import layering, packing, serving_rules
+
+ALL_RULES: List[Rule] = sorted(
+    [*packing.RULES, *serving_rules.RULES, *layering.RULES],
+    key=lambda r: r.rule_id,
+)
+
+_by_id: Dict[str, Rule] = {}
+for _rule in ALL_RULES:
+    if _rule.rule_id in _by_id:
+        raise AssertionError(f"duplicate rule id {_rule.rule_id}")
+    _by_id[_rule.rule_id] = _rule
+
+RULES_BY_ID: Dict[str, Rule] = dict(_by_id)
+
+__all__ = ["ALL_RULES", "RULES_BY_ID"]

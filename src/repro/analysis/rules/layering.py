@@ -1,0 +1,175 @@
+"""Cross-module layering rules (RPL005, RPL006, RPL008).
+
+These express the repo's import/ownership architecture — the arrows a
+reviewer checks by memory: kernels sit below core, serving never
+imports the chaos layer, deprecated shims are exits not thoroughfares,
+and buffer donation is decided in exactly the modules that own the
+buffers.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Tuple
+
+from repro.analysis.lint import LintRun, Module, Rule, attr_chain, parse_module, repo_root
+
+# the repo's historical shim hosts — scanned even when the gate is run
+# on a single file, so a corpus/caller module still resolves the table
+_SHIM_HOST_SUFFIXES = (
+    "models/layers.py",
+    "core/bnn_layers.py",
+)
+
+
+def _deprecated_defs(module: Module) -> Dict[str, str]:
+    """``{function name: defining module norm}`` for every function
+    whose docstring declares it a DEPRECATED shim."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            doc = ast.get_docstring(node)
+            if doc is not None and doc.lstrip().startswith("DEPRECATED"):
+                out[node.name] = module.norm
+    return out
+
+
+def _shim_table(run: LintRun) -> Dict[str, str]:
+    def build(r: LintRun) -> Dict[str, str]:
+        table: Dict[str, str] = {}
+        seen = {m.norm for m in r.modules}
+        for suffix in _SHIM_HOST_SUFFIXES:
+            path = repo_root() / "src" / "repro" / suffix
+            norm = f"src/repro/{suffix}"
+            if norm not in seen and path.exists():
+                table.update(_deprecated_defs(parse_module(path, repo_root())))
+        for m in r.modules:
+            table.update(_deprecated_defs(m))
+        return table
+
+    return run.computed("rpl005.shims", build)  # type: ignore[return-value]
+
+
+def _check_shim_calls(module: Module, run: LintRun) -> Iterable[Tuple[int, str]]:
+    table = _shim_table(run)
+    if not table:
+        return
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func)
+        if chain is None:
+            continue
+        leaf = chain.split(".")[-1]
+        host = table.get(leaf)
+        if host is None or host == module.norm:
+            continue
+        yield (
+            node.lineno,
+            f"call to DEPRECATED shim `{leaf}` (defined in {host}) — "
+            f"internal code uses the graph front door "
+            f"(repro.graph.compile); shims exist only for external "
+            f"callers mid-migration",
+        )
+
+
+def _imported_modules(tree: ast.Module) -> Iterable[Tuple[int, str]]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                yield node.lineno, alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module is not None:
+            yield node.lineno, node.module
+
+
+def _violates(imported: str, forbidden_prefix: str) -> bool:
+    return imported == forbidden_prefix or imported.startswith(forbidden_prefix + ".")
+
+
+def _check_layering(module: Module, run: LintRun) -> Iterable[Tuple[int, str]]:
+    in_kernels = module.in_dir("kernels")
+    in_serving = module.in_dir("serving")
+    # the linter half of repro.analysis must stay importable with
+    # nothing installed (the CI gate runs it before pip gets a chance)
+    bare_analysis = module.in_dir("analysis") and not module.endswith(
+        "jaxpr_audit.py"
+    )
+    for line, name in _imported_modules(module.tree):
+        if in_kernels and _violates(name, "repro.core"):
+            yield (
+                line,
+                f"kernels module imports `{name}` — kernels are the "
+                f"bottom layer; repro.core depends on kernels, never "
+                f"the reverse",
+            )
+        elif in_serving and _violates(name, "repro.robustness"):
+            yield (
+                line,
+                f"serving module imports `{name}` — fault injection "
+                f"wraps the server from outside (no serving -> "
+                f"robustness cycle)",
+            )
+        elif bare_analysis and (
+            name.split(".")[0] in ("jax", "jaxlib", "numpy")
+            or (
+                _violates(name, "repro")
+                and not _violates(name, "repro.analysis")
+            )
+        ):
+            yield (
+                line,
+                f"contract linter imports `{name}` — the lint engine "
+                f"is dependency-free (stdlib ast only) so the CI gate "
+                f"runs without jax; heavy analysis lives in "
+                f"repro.analysis.jaxpr_audit",
+            )
+
+
+# modules that own the buffers they donate: the compiler emits the
+# serving donation contract, the train loops donate their own state
+_DONATE_BLESSED_SUFFIXES = (
+    "graph/compile.py",
+    "train/loop.py",
+    "launch/train.py",
+    "launch/dryrun.py",
+)
+
+
+def _check_donation_sites(module: Module, run: LintRun) -> Iterable[Tuple[int, str]]:
+    if any(module.endswith(s) for s in _DONATE_BLESSED_SUFFIXES):
+        return
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg in ("donate_argnums", "donate_argnames"):
+                yield (
+                    kw.value.lineno,
+                    "`donate_argnums` outside the owning modules — "
+                    "donation aliases buffers the caller may still "
+                    "hold; serving gets its contract from "
+                    "CompiledBNN.serving_jit_kwargs, training from "
+                    "train/loop.py",
+                )
+
+
+RULES = [
+    Rule(
+        "RPL005",
+        "deprecated shims are not called internally",
+        "DESIGN.md §8",
+        _check_shim_calls,
+    ),
+    Rule(
+        "RPL006",
+        "layer import arrows point one way",
+        "DESIGN.md §13",
+        _check_layering,
+    ),
+    Rule(
+        "RPL008",
+        "buffer donation only in owning modules",
+        "DESIGN.md §10",
+        _check_donation_sites,
+    ),
+]

@@ -1,0 +1,189 @@
+"""Packing-domain design rules: the bit-layout contract (RPL001,
+RPL003, RPL007).
+
+The single-cell thesis of the paper survives in software only because
+there is exactly ONE packing implementation (``kernels/packed.py
+pack_words``) and exactly one sign convention per boundary (DESIGN.md
+§1-§2, §12).  These rules keep new code from quietly growing a second
+one.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Tuple
+
+from repro.analysis.lint import LintRun, Module, Rule, attr_chain
+
+# the modules allowed to touch bits directly: the canonical jnp
+# implementation, its Pallas twin, and the kernel bodies whose fused
+# epilogues shift-or decisions into words in VMEM
+_PACK_BLESSED_SUFFIXES = (
+    "kernels/packed.py",
+    "kernels/pack.py",
+    "kernels/popcount_gemm.py",
+    "kernels/packed_conv.py",
+    "kernels/fused_mlp.py",
+    "kernels/csa.py",
+    "kernels/xnor_gemm.py",
+    "kernels/ref.py",
+)
+
+_SIGN_CHAINS = frozenset(
+    {"jnp.sign", "np.sign", "numpy.sign", "jax.numpy.sign", "lax.sign", "jax.lax.sign"}
+)
+
+
+def _is_zero(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and node.value in (0, 0.0)
+
+
+def _is_sign_compare(node: ast.AST) -> bool:
+    """A ``x > 0`` / ``x >= 0`` comparison — the binarization seed."""
+    return (
+        isinstance(node, ast.Compare)
+        and len(node.ops) == 1
+        and isinstance(node.ops[0], (ast.Gt, ast.GtE))
+        and _is_zero(node.comparators[0])
+    )
+
+
+def _chain_endswith(node: ast.AST, leaf: str) -> bool:
+    chain = attr_chain(node)
+    return chain is not None and chain.split(".")[-1] == leaf
+
+
+def _check_manual_pack(module: Module, run: LintRun) -> Iterable[Tuple[int, str]]:
+    if any(module.endswith(s) for s in _PACK_BLESSED_SUFFIXES):
+        return
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func)
+        if chain in _SIGN_CHAINS:
+            yield (
+                node.lineno,
+                f"raw `{chain}` — binarization must go through "
+                f"kernels.packed (pack_words / PackedArray.pack / "
+                f"adopt_packed), not a local sign",
+            )
+        elif (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "astype"
+            and _is_sign_compare(node.func.value)
+            and any(_chain_endswith(a, "uint32") for a in node.args)
+        ):
+            yield (
+                node.lineno,
+                "manual bit-packing seed `(x > 0).astype(uint32)` — "
+                "use kernels.packed.pack_words / PackedArray.pack",
+            )
+        elif _chain_endswith(node.func, "sum") and any(
+            _chain_endswith(kw.value, "uint32")
+            for kw in node.keywords
+            if kw.arg == "dtype"
+        ):
+            if any(
+                isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.LShift)
+                for a in node.args
+                for sub in ast.walk(a)
+            ):
+                yield (
+                    node.lineno,
+                    "manual shift-or word packing — the one packing "
+                    "loop lives in kernels.packed.pack_words",
+                )
+
+
+# sign-decision sites the repo blesses, with the convention each one
+# is allowed to spell (DESIGN.md §12's duality table): Gt is the pack
+# convention `x > 0`, GtE the post-BN fold compare `s >= 0`
+_SIGN_SITES = {
+    "kernels/packed.py": (ast.Gt,),
+    "kernels/ref.py": (ast.Gt, ast.GtE),
+    "core/binarize.py": (ast.Gt, ast.GtE),
+    "core/bnn_layers.py": (ast.Gt, ast.GtE),
+    "core/threshold.py": (ast.Gt, ast.GtE),
+    "models/quantize.py": (ast.Gt, ast.GtE),
+    "train/models.py": (ast.Gt, ast.GtE),
+    "train/export.py": (ast.Gt,),
+}
+
+_WHERE_CHAINS = frozenset({"jnp.where", "np.where", "numpy.where", "jax.numpy.where"})
+
+
+def _is_pm1(node: ast.AST) -> bool:
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        node = node.operand
+    return isinstance(node, ast.Constant) and node.value in (1, 1.0)
+
+
+def _check_sign_convention(module: Module, run: LintRun) -> Iterable[Tuple[int, str]]:
+    allowed: Tuple[type, ...] = ()
+    for suffix, ops in _SIGN_SITES.items():
+        if module.endswith(suffix):
+            allowed = ops
+            break
+    for node in ast.walk(module.tree):
+        if not (
+            isinstance(node, ast.Call)
+            and attr_chain(node.func) in _WHERE_CHAINS
+            and len(node.args) == 3
+            and _is_sign_compare(node.args[0])
+            and _is_pm1(node.args[1])
+            and _is_pm1(node.args[2])
+        ):
+            continue
+        op = node.args[0].ops[0]  # type: ignore[attr-defined]
+        if isinstance(op, allowed):
+            continue
+        spelled = ">" if isinstance(op, ast.Gt) else ">="
+        yield (
+            node.lineno,
+            f"sign-decision literal `x {spelled} 0 ? +1 : -1` outside "
+            f"its blessed site — pack is `> 0` (kernels/packed.py), "
+            f"the folded-BN compare `>= 0` (train/models.py), export "
+            f"`w > 0` (models/quantize.py); new sites must be added "
+            f"to the §12 convention table, not inlined",
+        )
+
+
+def _check_vmem_budget(module: Module, run: LintRun) -> Iterable[Tuple[int, str]]:
+    if module.endswith("kernels/packed.py"):
+        return
+    for node in ast.walk(module.tree):
+        targets: List[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and "VMEM_BUDGET" in t.id:
+                yield (
+                    node.lineno,
+                    f"`{t.id}` (re)defined here — the VMEM residency "
+                    f"budget is single-sourced in "
+                    f"kernels.packed.VMEM_BUDGET_BYTES; import it",
+                )
+
+
+RULES = [
+    Rule(
+        "RPL001",
+        "binarization/packing only through kernels.packed",
+        "DESIGN.md §2",
+        _check_manual_pack,
+    ),
+    Rule(
+        "RPL003",
+        "sign-convention literals only at blessed sites",
+        "DESIGN.md §12",
+        _check_sign_convention,
+    ),
+    Rule(
+        "RPL007",
+        "VMEM budget single-sourced in kernels.packed",
+        "DESIGN.md §6",
+        _check_vmem_budget,
+    ),
+]

@@ -125,7 +125,8 @@ class CompiledBNN:
                                 backend=self.backend,
                                 vmem_budget=self.vmem_budget)
 
-    def tuning_keys_for_batches(self, batches) -> Tuple[tuple, ...]:
+    def tuning_keys_for_batches(self, batches: Sequence[int]
+                                ) -> Tuple[tuple, ...]:
         """Deduplicated union of ``tuning_keys_for_batch`` over many
         batch sizes — the serving engine's prewarm set: one call covers
         every (bucket, ragged-valid) dispatch level the bucketing
@@ -171,9 +172,22 @@ class CompiledBNN:
             kw["donate_argnums"] = (1,)
         return kw
 
+    def audit(self, params: Optional[Dict[str, Any]] = None,
+              x: Any = None, batch: Optional[int] = None,
+              max_batch: int = 64) -> Any:
+        """Design-rule check this artifact (repro.analysis.jaxpr_audit,
+        DESIGN.md §13): no banned int32 activation in the traced jaxpr
+        (kernel backends), plan residency claims re-derived under the
+        budget, the donation contract, and the bucketed trace bound.
+        Raises :class:`~repro.analysis.jaxpr_audit.AuditError` on any
+        violation; returns the :class:`AuditReport` otherwise."""
+        from repro.analysis.jaxpr_audit import audit_compiled
+        return audit_compiled(self, params=params, x=x, batch=batch,
+                              max_batch=max_batch).raise_if_failed()
+
     # -------------------------------------------------------------- #
-    def init(self, key, threshold_range: int = 3,
-             dtype=jnp.float32) -> Dict[str, Any]:
+    def init(self, key: jax.Array, threshold_range: int = 3,
+             dtype: Any = jnp.float32) -> Dict[str, Any]:
         """Random packed serving parameters for the spec — key-split
         order and shapes are bit-compatible with the legacy
         packed_cnn_init (integer entries keep float latent weights +
@@ -210,8 +224,8 @@ class CompiledBNN:
         return params
 
     # -------------------------------------------------------------- #
-    def apply(self, params: Dict[str, Any], x,
-              valid_rows: Optional[int] = None):
+    def apply(self, params: Dict[str, Any], x: Any,
+              valid_rows: Optional[int] = None) -> Any:
         """Execute the plan.  ``x``: float NHWC for image specs, a
         PackedArray [..., K0] for dense-entry specs.  Bit-identical to
         the legacy builder chain on pallas/interpret/xla; inter-layer
@@ -400,7 +414,8 @@ def compile_dense_stack(k0: int, ns: Sequence[int],
                    batch=batch)
 
 
-def serve_folded_stack(xp: PackedArray, layers,
+def serve_folded_stack(xp: PackedArray,
+                       layers: Sequence[Tuple[PackedArray, Any]],
                        backend: Optional[str] = None,
                        vmem_budget: Optional[int] = None) -> PackedArray:
     """Serve (wp [N, K] PackedArray, FoldedThreshold) layer pairs —

@@ -51,7 +51,7 @@ __all__ = ["Binarize", "BinaryConv", "BinaryDense", "BNNSpec",
 # ------------------------------------------------------------------ #
 # geometry inference (moved here from models/layers.py)                #
 # ------------------------------------------------------------------ #
-def infer_conv_geometry(layer) -> Tuple[int, int]:
+def infer_conv_geometry(layer: ConvLayer) -> Tuple[int, int]:
     """Recover (stride, pad) from a workloads.ConvLayer's in/out dims —
     the paper's tables record only the feature-map sizes.  Searches
     small strides/pads for an exact match (BinaryNet: s=1 same-pad;
@@ -82,7 +82,7 @@ def infer_pool(x_from: int, x_to: int) -> Optional[Tuple[int, int]]:
     raise ValueError(f"no standard max-pool maps {x_from} -> {x_to}")
 
 
-def fc_entry_size(last_conv, fc0) -> int:
+def fc_entry_size(last_conv: ConvLayer, fc0: FCLayer) -> int:
     """Spatial size the last conv's maps must pool down to so that
     z2 * s^2 == fc0.n_in (the flatten the paper's tables imply)."""
     s2 = fc0.n_in // last_conv.z2

@@ -29,7 +29,7 @@ performance, never in bits.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 from repro.graph.ir import (Binarize, BinaryConv, BinaryDense, BNNSpec,
                             BNThreshold, IntegerEntry, Logits, MaxPool)
@@ -176,7 +176,8 @@ def plan_tuning_keys(spec: BNNSpec, plan: Tuple[PlanStep, ...],
 
 
 def batches_tuning_keys(spec: BNNSpec, plan: Tuple[PlanStep, ...],
-                        batches, backend: Optional[str] = None,
+                        batches: Sequence[int],
+                        backend: Optional[str] = None,
                         vmem_budget: Optional[int] = None
                         ) -> Tuple[tuple, ...]:
     """Deduplicated union of ``plan_tuning_keys`` over many batch

@@ -44,7 +44,7 @@ def shard_batch(tree: Any, mesh: Optional[Mesh]) -> Any:
     if mesh is None:
         return tree
 
-    def put(leaf):
+    def put(leaf: Any) -> Any:
         shape = np.shape(leaf)
         want = (BATCH_AXES,) + (None,) * (len(shape) - 1)
         spec = fit_spec(shape, want, mesh)
@@ -76,7 +76,7 @@ def replicate(tree: Any, mesh: Optional[Mesh]) -> Any:
     if mesh is None:
         return tree
 
-    def put(leaf):
+    def put(leaf: Any) -> Any:
         return jax.device_put(leaf, NamedSharding(mesh, PartitionSpec()))
 
     return jax.tree.map(put, tree)

@@ -266,10 +266,10 @@ class BNNServer:
 
     def __init__(
         self,
-        compiled,
-        params,
+        compiled: Any,
+        params: Dict[str, Any],
         max_batch: int = 32,
-        mesh=None,
+        mesh: Optional[Any] = None,
         donate: bool = True,
         dispatch_ahead: int = 2,
         admit_window_s: float = 0.002,

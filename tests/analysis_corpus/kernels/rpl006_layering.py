@@ -1,0 +1,10 @@
+"""RPL006 violation: a kernels module importing repro.core (the arrow
+points the other way; this corpus path stands in for
+src/repro/kernels/)."""
+
+from repro.core.bnn_layers import binary_conv
+
+
+def conv(xp, wf):
+    # the import above is the violation; the call just uses it
+    return binary_conv(xp, wf)

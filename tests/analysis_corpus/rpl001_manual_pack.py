@@ -1,0 +1,18 @@
+"""RPL001 violation: manual binarization/packing outside kernels.packed."""
+
+import jax.numpy as jnp
+
+
+def local_sign(x):
+    # violation: raw sign instead of the kernels.packed epilogue
+    return jnp.sign(x)
+
+
+def local_pack_seed(x):
+    # violation: the hand-rolled pack seed
+    return (x > 0).astype(jnp.uint32)
+
+
+def local_shift_or(bits, shifts):
+    # violation: the hand-rolled shift-or word packer
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)

@@ -1,0 +1,9 @@
+"""RPL003 violation: an inlined sign-convention literal outside the
+blessed sites of the DESIGN.md §12 convention table."""
+
+import jax.numpy as jnp
+
+
+def my_binarize(x):
+    # violation: a fresh `>= 0 ? +1 : -1` decision in unblessed code
+    return jnp.where(x >= 0, 1.0, -1.0)

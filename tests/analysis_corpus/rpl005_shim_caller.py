@@ -1,0 +1,9 @@
+"""RPL005 violation: internal code calling a DEPRECATED shim instead
+of the graph front door."""
+
+from repro.models.layers import packed_cnn_apply
+
+
+def forward(params, x):
+    # violation: shims exist only for external callers mid-migration
+    return packed_cnn_apply(params, x)

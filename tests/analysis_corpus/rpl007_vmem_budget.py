@@ -1,0 +1,5 @@
+"""RPL007 violation: a second VMEM budget definition outside
+kernels/packed.py."""
+
+# violation: the residency budget must be imported, never redefined
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024

@@ -1,0 +1,9 @@
+"""RPL008 violation: buffer donation declared outside the owning
+modules (graph/compile.py's serving contract, train/loop.py)."""
+
+import jax
+
+
+def make_step(step):
+    # violation: ad-hoc donation aliases buffers the caller still holds
+    return jax.jit(step, donate_argnums=(0, 1))

@@ -1,0 +1,20 @@
+"""RPL010 violation: two locks acquired in opposite nesting orders in
+the same class — the classic deadlock."""
+
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._qlock = threading.Lock()
+        self._stats_lock = threading.Lock()
+
+    def enqueue(self, item):
+        with self._qlock:
+            with self._stats_lock:
+                self.count += 1
+
+    def report(self):
+        with self._stats_lock:
+            with self._qlock:
+                return self.count

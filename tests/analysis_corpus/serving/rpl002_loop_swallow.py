@@ -1,0 +1,18 @@
+"""RPL002 violation: a serving worker loop swallowing BaseException
+(which would eat the chaos layer's ThreadKill)."""
+
+
+def _dispatch_loop(self):
+    while True:
+        try:
+            self._dispatch_once()
+        except BaseException:  # noqa: B036 - the violation under test
+            continue
+
+
+def _complete_loop(self):
+    while True:
+        try:
+            self._complete_once()
+        except:  # noqa: E722 - the violation under test
+            pass

@@ -1,0 +1,9 @@
+"""RPL009 violation: wall-clock time in the serving layer (deadline
+and latency math must use the monotonic clock)."""
+
+import time
+
+
+def deadline(timeout_s):
+    # violation: time.time() jumps under NTP; perf_counter does not
+    return time.time() + timeout_s

@@ -1,0 +1,24 @@
+"""RPL004 violation: a serving/server.py counter mutated outside its
+lock (this corpus path stands in for src/repro/serving/server.py)."""
+
+import threading
+
+
+class BNNServer:
+    def __init__(self):
+        self._stats_lock = threading.Lock()
+        self._qlock = threading.Lock()
+        self._n_requests = 0
+        self._queue = []
+
+    def submit(self, req):
+        # violation: _n_requests is _stats_lock-protected
+        self._n_requests += 1
+        with self._qlock:
+            self._queue.append(req)
+
+    def _drain(self):
+        # violation: _queue is _qlock-protected
+        self._queue.pop()
+        with self._stats_lock:
+            self._n_requests -= 1

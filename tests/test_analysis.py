@@ -1,0 +1,309 @@
+"""The analyzers themselves (DESIGN.md §13): every RPL rule fires on
+its golden-violation corpus file and stays silent on the real tree;
+the jaxpr auditor passes on honest artifacts and fails loudly on a
+deliberately mis-compiled one (forced unpacked output).
+
+The lint half of these tests needs no jax — the engine is stdlib-only
+by contract (RPL006 enforces that on the engine itself).
+"""
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import lint_files, lint_paths, repo_root
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+CORPUS = repo_root() / "tests" / "analysis_corpus"
+
+# rule id -> its corpus file (one seeded violation each)
+CORPUS_FILES = {
+    "RPL001": CORPUS / "rpl001_manual_pack.py",
+    "RPL002": CORPUS / "serving" / "rpl002_loop_swallow.py",
+    "RPL003": CORPUS / "rpl003_sign_literal.py",
+    "RPL004": CORPUS / "serving" / "server.py",
+    "RPL005": CORPUS / "rpl005_shim_caller.py",
+    "RPL006": CORPUS / "kernels" / "rpl006_layering.py",
+    "RPL007": CORPUS / "rpl007_vmem_budget.py",
+    "RPL008": CORPUS / "rpl008_donation.py",
+    "RPL009": CORPUS / "serving" / "rpl009_wallclock.py",
+    "RPL010": CORPUS / "rpl010_lock_cycle.py",
+}
+
+
+# ------------------------------------------------------------------ #
+# the catalog                                                          #
+# ------------------------------------------------------------------ #
+def test_catalog_is_complete_and_cited():
+    assert set(RULES_BY_ID) == set(CORPUS_FILES), (
+        "every rule needs a corpus file and vice versa")
+    for rule in ALL_RULES:
+        assert rule.design_ref.startswith("DESIGN.md §"), rule.rule_id
+
+
+@pytest.mark.parametrize("rule_id", sorted(CORPUS_FILES))
+def test_rule_fires_on_its_corpus_file(rule_id):
+    path = CORPUS_FILES[rule_id]
+    findings = lint_files([path], root=repo_root())
+    fired = {f.rule for f in findings}
+    assert rule_id in fired, (
+        f"{rule_id} stayed silent on {path.name}; fired: {sorted(fired)}")
+    for f in findings:
+        assert f.line > 0 and f.design_ref.startswith("DESIGN.md §")
+        # the reporting contract: "RPL### path:line message (§ref)"
+        assert f.format().startswith(f"{f.rule} {f.path}:{f.line} ")
+
+
+def test_tree_is_clean():
+    """The gate's core promise: zero findings on src/repro + tools."""
+    findings = lint_paths(
+        [repo_root() / "src" / "repro", repo_root() / "tools"],
+        root=repo_root())
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+@pytest.mark.parametrize("rule_id", sorted(CORPUS_FILES))
+def test_gate_cli_rejects_corpus_file(rule_id):
+    """`python -m repro.analysis --gate <corpus file>` exits nonzero
+    and reports the finding in the documented format."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--gate",
+         str(CORPUS_FILES[rule_id])],
+        capture_output=True, text=True,
+        cwd=repo_root(), env=_gate_env())
+    assert proc.returncode != 0, proc.stdout + proc.stderr
+    assert rule_id in proc.stdout
+    assert "DESIGN.md §" in proc.stdout
+
+
+def test_gate_cli_list_rules():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        capture_output=True, text=True,
+        cwd=repo_root(), env=_gate_env())
+    assert proc.returncode == 0
+    for rule_id in CORPUS_FILES:
+        assert rule_id in proc.stdout
+
+
+def _gate_env():
+    import os
+    env = dict(os.environ)
+    src = str(repo_root() / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# ------------------------------------------------------------------ #
+# rule-specific behavior beyond "it fires"                             #
+# ------------------------------------------------------------------ #
+def test_rpl002_accepts_kill_aware_handler(tmp_path):
+    """A broad handler that classifies through _is_kill (or re-raises)
+    is the sanctioned pattern — it must NOT fire."""
+    good = tmp_path / "serving" / "loops.py"
+    good.parent.mkdir()
+    good.write_text(
+        "def _supervise_loop(self):\n"
+        "    while True:\n"
+        "        try:\n"
+        "            self._tick()\n"
+        "        except BaseException as e:\n"
+        "            if self._is_kill(e):\n"
+        "                raise\n"
+        "            continue\n")
+    assert lint_files([good]) == []
+
+
+def test_rpl004_requires_the_right_lock(tmp_path):
+    """Holding *a* lock is not enough — the counter's own lock must be
+    held (the corpus file holds the wrong one in _drain)."""
+    findings = lint_files([CORPUS_FILES["RPL004"]], root=repo_root())
+    msgs = [f.message for f in findings if f.rule == "RPL004"]
+    assert any("_stats_lock" in m for m in msgs)
+    assert any("_qlock" in m for m in msgs)
+
+
+def test_rpl010_nested_order_is_not_a_cycle(tmp_path):
+    """One consistent nesting order across methods is legal."""
+    good = tmp_path / "ordered.py"
+    good.write_text(
+        "import threading\n\n\n"
+        "class Worker:\n"
+        "    def __init__(self):\n"
+        "        self._qlock = threading.Lock()\n"
+        "        self._stats_lock = threading.Lock()\n\n"
+        "    def a(self):\n"
+        "        with self._qlock:\n"
+        "            with self._stats_lock:\n"
+        "                pass\n\n"
+        "    def b(self):\n"
+        "        with self._qlock:\n"
+        "            with self._stats_lock:\n"
+        "                pass\n")
+    assert lint_files([good]) == []
+
+
+def test_rpl010_sees_cycle_through_helper_call(tmp_path):
+    """The edge graph includes locks acquired transitively through
+    self-method calls, not just lexical nesting."""
+    bad = tmp_path / "transitive.py"
+    bad.write_text(
+        "import threading\n\n\n"
+        "class Worker:\n"
+        "    def __init__(self):\n"
+        "        self._a = threading.Lock()\n"
+        "        self._b_lock = threading.Lock()\n\n"
+        "    def _bump(self):\n"
+        "        with self._a:\n"
+        "            pass\n\n"
+        "    def run(self):\n"
+        "        with self._b_lock:\n"
+        "            self._bump()\n\n"
+        "    def other(self):\n"
+        "        with self._a:\n"
+        "            with self._b_lock:\n"
+        "                pass\n")
+    # _a is named without "lock"; use names the with-scanner accepts
+    bad.write_text(bad.read_text().replace("_a", "_a_lock"))
+    findings = lint_files([bad])
+    assert any(f.rule == "RPL010" for f in findings), findings
+
+
+# ------------------------------------------------------------------ #
+# the jaxpr auditor (needs jax)                                        #
+# ------------------------------------------------------------------ #
+def test_audit_passes_on_honest_compile():
+    pytest.importorskip("jax")
+    from repro import graph
+
+    cb = graph.compile_dense_stack(64, [64, 48, 16], [True, True, False],
+                                   backend="interpret", batch=2)
+    report = cb.audit()
+    assert report.ok
+    names = [c.name for c in report.checks]
+    assert names == ["int32-escape", "plan-vmem", "donation",
+                     "trace-bound"]
+    # detector sanity: the unthresholded logits head's int32 dot IS in
+    # the jaxpr — the auditor bans activations, not the classifier
+    assert (2, 16) in report.int32_shapes
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+@pytest.mark.parametrize("workload", ["binarynet", "alexnet"])
+def test_audit_passes_on_paper_workloads(workload, backend):
+    """The acceptance contract: both paper workloads (BinaryNet
+    CIFAR-10, XNOR-AlexNet) audit clean on the xla reference path and
+    in Pallas interpret mode (where kernel bodies are inlined into the
+    jaxpr, so the int32-escape check sees everything)."""
+    pytest.importorskip("jax")
+    from repro import graph
+    from repro.core.workloads import alexnet_imagenet, binarynet_cifar10
+
+    wl = {"binarynet": binarynet_cifar10,
+          "alexnet": alexnet_imagenet}[workload]()
+    cb = graph.compile(wl, backend=backend, batch=2)
+    report = cb.audit()
+    assert report.ok, report.format()
+    escape = report.checks[0]
+    assert escape.name == "int32-escape"
+    # the reference path skips the HBM claim; the kernel path proves it
+    assert escape.skipped == (backend == "xla")
+    if backend == "interpret":
+        assert report.banned_shapes, "plan derived no banned shapes"
+
+
+def test_audit_fails_on_forced_unpacked_output(monkeypatch):
+    """Mis-compile on purpose: strip the fused threshold->pack epilogue
+    so the int32 [M, N] activation escapes — audit() must fail with the
+    int32-escape check, not pass quietly."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro import graph
+    from repro.analysis.jaxpr_audit import AuditError
+    from repro.kernels import ops as kops
+
+    orig = kops.binary_binary_dense
+
+    def unfused(xp, wp, threshold=None, pack_out=False, backend=None,
+                **kw):
+        y = orig(xp, wp, threshold=threshold, pack_out=False,
+                 backend=backend, **kw)
+        if pack_out:
+            return kops.binarize_pack(y.astype(jnp.float32),
+                                      backend=backend)
+        return y
+
+    # budget 0 forces chained dense launches (the megakernel would
+    # bypass binary_binary_dense entirely)
+    cb = graph.compile_dense_stack(64, [64, 16], [True, False],
+                                   backend="interpret", batch=2,
+                                   vmem_budget=0)
+    # graph.compile holds the same module object, so one patch covers
+    # both call sites
+    monkeypatch.setattr(kops, "binary_binary_dense", unfused)
+    with pytest.raises(AuditError, match="int32-escape"):
+        cb.audit()
+
+
+def test_audit_fails_on_broken_donation_contract():
+    pytest.importorskip("jax")
+    from repro import graph
+    from repro.analysis.jaxpr_audit import audit_compiled
+
+    cb = graph.compile_dense_stack(64, [16], [False],
+                                   backend="interpret", batch=2)
+
+    class Misdonating(type(cb)):  # noqa: SLOT000 - test double
+        def serving_jit_kwargs(self, donate=True):
+            kw = {"static_argnames": ()}
+            if donate:
+                kw["donate_argnums"] = (0, 1)   # donates params too
+            return kw
+
+    cb.__class__ = Misdonating
+    report = audit_compiled(cb)
+    bad = {c.name for c in report.failures()}
+    assert "donation" in bad, report.format()
+
+
+def test_audit_fails_when_budget_claim_breaks():
+    """Shrink the budget after compile: the fused_stack's residency
+    claim no longer re-derives, and plan-vmem must catch it."""
+    pytest.importorskip("jax")
+    from repro import graph
+    from repro.analysis.jaxpr_audit import audit_compiled
+
+    cb = graph.compile_dense_stack(64, [64, 64, 16],
+                                   [True, True, False],
+                                   backend="interpret", batch=2)
+    assert any(s.kind == "fused_stack" for s in cb.plan)
+    cb.vmem_budget = 0
+    report = audit_compiled(cb)
+    assert "plan-vmem" in {c.name for c in report.failures()}, (
+        report.format())
+
+
+def test_banned_shapes_derive_from_plan():
+    pytest.importorskip("jax")
+    from repro import graph
+    from repro.analysis.jaxpr_audit import banned_int32_shapes
+
+    cb = graph.compile_dense_stack(64, [64, 48, 16],
+                                   [True, True, False],
+                                   backend="interpret", batch=2)
+    banned = banned_int32_shapes(cb, 2)
+    assert (2, 64) in banned and (2, 48) in banned
+    assert (2, 16) not in banned        # the logits head may be int32
+
+
+def test_corpus_dir_gate_exit_nonzero():
+    """The whole corpus directory fails the gate in one run (cross-file
+    rules see the set together, same as CI)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--gate", str(CORPUS)],
+        capture_output=True, text=True,
+        cwd=repo_root(), env=_gate_env())
+    assert proc.returncode != 0
+    for rule_id in CORPUS_FILES:
+        assert rule_id in proc.stdout, f"{rule_id} missing from gate output"

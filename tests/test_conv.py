@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.jaxpr_audit import eqn_shapes
 from repro.core.bnn_layers import (binary_conv, binary_weight_conv,
                                    fold_bn_threshold,
                                    fold_conv_to_channel_thresholds,
@@ -128,14 +129,7 @@ def test_conv_auto_falls_back_to_im2col(monkeypatch):
     # matrix; with the real budget it does not
     m, k32 = 36, 9                       # 6x6 out, 3*3*1 words
     def shapes(fn):
-        avals = set()
-        for eqn in _iter_eqns(jax.make_jaxpr(fn)(xp, wf).jaxpr):
-            for v in eqn.outvars:
-                a = getattr(v, "aval", None)
-                if a is not None and getattr(a, "dtype", None) == \
-                        jnp.uint32:
-                    avals.add(tuple(a.shape))
-        return avals
+        return eqn_shapes(fn, xp, wf, dtype=jnp.uint32)
     assert (m, k32) in shapes(
         lambda a, b: binary_conv2d(a, b, backend="interpret", impl="auto"))
     monkeypatch.undo()
@@ -160,28 +154,10 @@ def test_conv_validates_operands():
 
 # ------------------------------------------------------------------ #
 # jaxpr regression: no int32 NHWC intermediate on the fused path       #
+# (walker lives in repro.analysis.jaxpr_audit — THE shared detector)   #
 # ------------------------------------------------------------------ #
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for val in eqn.params.values():
-            vals = val if isinstance(val, (list, tuple)) else (val,)
-            for v in vals:
-                inner = getattr(v, "jaxpr", None)
-                if inner is not None:
-                    yield from _iter_eqns(inner)
-
-
 def _int32_avals(fn, *args):
-    closed = jax.make_jaxpr(fn)(*args)
-    shapes = set()
-    for eqn in _iter_eqns(closed.jaxpr):
-        for v in eqn.outvars:
-            aval = getattr(v, "aval", None)
-            if aval is not None and getattr(aval, "dtype", None) == \
-                    jnp.int32:
-                shapes.add(tuple(aval.shape))
-    return shapes
+    return eqn_shapes(fn, *args, dtype=jnp.int32)
 
 
 def test_fused_conv_has_no_int32_nhwc_intermediate():

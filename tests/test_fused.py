@@ -17,6 +17,7 @@ import numpy as np
 import pytest
 from conftest import given, settings, st  # hypothesis or self-skip shim
 
+from repro.analysis.jaxpr_audit import eqn_shapes
 from repro.core.bnn_layers import (bnn_dense_serve_folded,
                                    bnn_mlp_serve_folded,
                                    fold_to_channel_thresholds,
@@ -121,30 +122,10 @@ def test_unfused_and_fused_agree():
 
 # ------------------------------------------------------------------ #
 # VMEM residency: the int32 [M, N] intermediate must not exist         #
+# (walker lives in repro.analysis.jaxpr_audit — THE shared detector)   #
 # ------------------------------------------------------------------ #
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for val in eqn.params.values():
-            vals = val if isinstance(val, (list, tuple)) else (val,)
-            for v in vals:
-                inner = getattr(v, "jaxpr", None)
-                if inner is not None:
-                    yield from _iter_eqns(inner)
-
-
 def _int32_avals(fn, *args):
-    """All int32 eqn-output shapes anywhere in fn's jaxpr (pallas_call
-    kernel jaxprs included)."""
-    closed = jax.make_jaxpr(fn)(*args)
-    shapes = set()
-    for eqn in _iter_eqns(closed.jaxpr):
-        for v in eqn.outvars:
-            aval = getattr(v, "aval", None)
-            if aval is not None and getattr(aval, "dtype", None) == \
-                    jnp.int32:
-                shapes.add(tuple(aval.shape))
-    return shapes
+    return eqn_shapes(fn, *args, dtype=jnp.int32)
 
 
 def test_fused_path_has_no_int32_mn_intermediate():

@@ -371,44 +371,30 @@ def test_compile_vmem_budget_reaches_the_kernel():
 
 # ------------------------------------------------------------------ #
 # jaxpr regression: no int32 activation in HBM on the compiled path    #
+# (the walker + banned-shape derivation live in repro.analysis)        #
 # ------------------------------------------------------------------ #
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for val in eqn.params.values():
-            vals = val if isinstance(val, (list, tuple)) else (val,)
-            for v in vals:
-                inner = getattr(v, "jaxpr", None)
-                if inner is not None:
-                    yield from _iter_eqns(inner)
-
-
 def test_compiled_path_has_no_int32_activation():
-    """Compiled small net on the kernel backend: the int32 NHWC conv
-    activation and the int32 [M, N] dense activation must not exist
-    anywhere in the jaxpr (fused threshold->pack epilogues)."""
+    """Compiled small net on the kernel backend, audited: the int32
+    NHWC conv activations and the int32 [M, N] dense activation must
+    not exist anywhere in the jaxpr (fused threshold->pack epilogues).
+    audit() derives the banned set from the plan itself — the shapes
+    the legacy unfused chain would write to HBM; in-kernel [bm, bn]
+    VMEM blocks (visible because interpret mode inlines the kernel
+    body) stay allowed."""
     spec = _small_spec()
     cb = graph.compile(spec, backend="interpret", batch=2)
     params = cb.init(jax.random.PRNGKey(2))
     x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 8, 32),
                           jnp.float32)
-    closed = jax.make_jaxpr(lambda p, a: cb.apply(p, a))(params, x)
-    int32_shapes = set()
-    for eqn in _iter_eqns(closed.jaxpr):
-        for v in eqn.outvars:
-            aval = getattr(v, "aval", None)
-            if aval is not None and \
-                    getattr(aval, "dtype", None) == jnp.int32:
-                int32_shapes.add(tuple(aval.shape))
-    # the logical int32 activations the legacy unfused chain would
-    # write to HBM (in-kernel [bm, bn] VMEM blocks — visible because
-    # interpret mode inlines the kernel body — are allowed)
-    banned = {(2, 8, 8, 64), (2, 64, 64),              # conv1 act
-              (2, 4, 4, 32), (2, 16, 32),              # conv2 act
-              (2, 48)}                                 # d1 act
-    assert not (int32_shapes & banned), int32_shapes & banned
+    report = cb.audit(params=params, x=x)
+    # the audit's banned set covers the hand-maintained list this test
+    # used to carry (conv1/conv2 activations + the d1 dense act)
+    assert {(2, 8, 8, 64), (2, 64, 64),                # conv1 act
+            (2, 4, 4, 32), (2, 16, 32),                # conv2 act
+            (2, 48)} <= report.banned_shapes
     # detector sanity: the logits head's int32 dot IS materialized
-    assert (2, 16) in int32_shapes
+    assert (2, 16) in report.int32_shapes
+    assert (2, 16) not in report.banned_shapes
 
 
 # ------------------------------------------------------------------ #

@@ -44,6 +44,27 @@ def _packed(rng, rows, d0=256):
 
 
 # ------------------------------------------------------------------ #
+# the audited serving contract (repro.analysis.jaxpr_audit)            #
+# ------------------------------------------------------------------ #
+def test_served_artifact_passes_audit():
+    """The exact CompiledBNN the server wraps must satisfy the audited
+    contracts: donation only on the server-owned batch input, static
+    valid_rows, and a prewarm key set bounded by the dispatch grid the
+    server actually uses (DESIGN.md §13)."""
+    cb, _, srv = _mlp_server(max_batch=8)
+    try:
+        report = cb.audit(max_batch=8)
+    finally:
+        srv.stop()
+    assert report.ok
+    by_name = {c.name: c for c in report.checks}
+    assert not by_name["donation"].skipped
+    assert not by_name["trace-bound"].skipped
+    # xla serving backend: the HBM check defers to the kernel backends
+    assert by_name["int32-escape"].skipped
+
+
+# ------------------------------------------------------------------ #
 # bucketing + ragged-mask policy                                       #
 # ------------------------------------------------------------------ #
 def test_bucket_edges():

@@ -110,6 +110,9 @@ def check_env(doc, path):
 
 
 def check_serve(doc, path):
+    """BENCH_serve*.json (ISSUE 6): throughput, scaling, stream, and
+    ragged-padding tables plus the bit-identity row; structural on
+    every run, perf thresholds only under --gate."""
     errs = _missing(doc, SERVE_TOP, path)
     if errs:
         return errs                      # later checks would just KeyError
@@ -264,14 +267,45 @@ def check_file(path, gate=False):
     return errs
 
 
+# artifact kind -> (detector keys, validator, unconditional invariants)
+# — what --list-schemas prints, and the single place a new artifact
+# family gets registered.
+SCHEMAS = {
+    "serve": ("throughput|scaling", "check_serve",
+              "bit_identity (--gate adds speedup/padding perf)"),
+    "faults": ("seu&chaos", "check_faults",
+               "+".join(CHAOS_INVARIANTS)),
+    "train": ("models", "check_train",
+              "+".join(TRAIN_INVARIANTS) + "+eval_acc>chance+margin"),
+}
+
+
+def list_schemas():
+    print("artifact schemas (kind: detector keys -> validator; "
+          "unconditional invariants):")
+    for kind, (keys, fn, invariants) in SCHEMAS.items():
+        print(f"  {kind}: {keys} -> {fn}; invariants: {invariants}")
+        if globals()[fn].__doc__ is None:
+            raise AssertionError(f"{fn} lost its docstring")
+    print(f"env provenance (all kinds): {', '.join(ENV_KEYS)}")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="validate BENCH_*.json artifact schemas")
-    ap.add_argument("files", nargs="+")
+    ap.add_argument("files", nargs="*")
     ap.add_argument("--gate", action="store_true",
                     help="also enforce the full-run serve perf gates "
                          "(speedup > 1, padding overhead < 1.5)")
+    ap.add_argument("--list-schemas", action="store_true",
+                    help="print the registered artifact kinds, their "
+                         "validators and invariants, then exit")
     args = ap.parse_args(argv)
+    if args.list_schemas:
+        return list_schemas()
+    if not args.files:
+        ap.error("at least one FILE is required (or --list-schemas)")
     errors = []
     for path in args.files:
         errors += check_file(path, gate=args.gate)
