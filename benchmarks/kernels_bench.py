@@ -48,6 +48,7 @@ COMPILE_OUT = os.path.join(_HERE, "BENCH_compile.json")
 SERVE_OUT = os.path.join(_HERE, "BENCH_serve.json")
 FAULTS_OUT = os.path.join(_HERE, "BENCH_faults.json")
 TRAIN_OUT = os.path.join(_HERE, "BENCH_train.json")
+DSE_OUT = os.path.join(_HERE, "BENCH_dse.json")
 
 
 def model_bytes(m, k, n):
@@ -1030,9 +1031,15 @@ if __name__ == "__main__":
                          "models end to end (fails when eval accuracy "
                          "does not beat chance by the margin, or on any "
                          "fold/serve/checkpoint bit-inconsistency)")
+    ap.add_argument("--dse", action="store_true",
+                    help="cycle-accurate TULIP-PE mesh simulation + "
+                         "design-space Pareto sweep (fails on "
+                         "simulator-vs-oracle divergence, a Table III "
+                         "cycle mismatch, or an energy advantage "
+                         "below the paper's 3x claim)")
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes for CI (with --fused/--conv/"
-                         "--compile/--serve/--faults/--train)")
+                         "--compile/--serve/--faults/--train/--dse)")
     args = ap.parse_args()
 
     def dest_for(default):
@@ -1057,5 +1064,11 @@ if __name__ == "__main__":
         run_faults(out_json=dest_for(FAULTS_OUT), smoke=args.smoke)
     elif args.train:
         run_train(out_json=dest_for(TRAIN_OUT), smoke=args.smoke)
+    elif args.dse:
+        # imported here: the sim package pulls the graph compiler in,
+        # which the other benchmark modes never need
+        from repro.sim.dse import run_dse
+
+        run_dse(out_json=dest_for(DSE_OUT), smoke=args.smoke)
     else:
         run(out_json=dest_for(DEFAULT_OUT))

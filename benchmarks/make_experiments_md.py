@@ -1,119 +1,403 @@
-"""Regenerate the data-driven sections of EXPERIMENTS.md from the
-dry-run artifacts + paper-table benchmarks.
+#!/usr/bin/env python
+"""Render EXPERIMENTS.md — the paper-reproduction report — from the
+tracked BENCH_*.json artifacts.
 
-  PYTHONPATH=src:. python -m benchmarks.make_experiments_md
+Every number in EXPERIMENTS.md is read back out of a benchmark
+artifact; nothing is typed in by hand.  The rendering is a pure
+function of (artifact contents, git commit timestamps), so CI can
+regenerate the file and fail on drift: a PR that changes an artifact
+(or this renderer) without re-rendering the report breaks the docs
+job, and a report that quotes a number no artifact contains cannot
+exist.
+
+Three ingredients:
+
+* **Paper-claim scoreboard** — each headline claim of
+  arXiv:2104.01699 (>= 3x energy/classification vs the MAC baseline,
+  no performance/area/accuracy penalty, Table III loop counts) next
+  to the measured value from BENCH_dse.json, with a pass mark.
+* **Per-artifact sections** — the key rows of every tracked
+  BENCH_*.json (kernels, conv, fused, compile, serve, faults, train,
+  dse) so the report is a one-page index into the full JSON.
+* **Provenance + staleness** — the env block each artifact was
+  measured under, and a warning for any artifact whose last git
+  commit predates the bench driver's (the numbers may have been
+  produced by an older harness; rerun to refresh).
+
+Stdlib-only on purpose: the CI docs job runs without jax installed.
+
+  python benchmarks/make_experiments_md.py          # writes EXPERIMENTS.md
+  python benchmarks/make_experiments_md.py --check  # exit 1 on drift
 """
 from __future__ import annotations
 
-import glob
+import argparse
 import io
 import json
 import os
+import subprocess
+import sys
 
-from benchmarks import roofline as R
-from benchmarks import table1, table2, table3, table4_5
+_HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(_HERE)
+OUT = os.path.join(ROOT, "EXPERIMENTS.md")
+DRIVER = "benchmarks/kernels_bench.py"
 
-HW = ("TPU v5e-class: 197 TFLOP/s bf16/chip, 819 GB/s HBM/chip, "
-      "~50 GB/s/link ICI; meshes (data=16, model=16) and "
-      "(pod=2, data=16, model=16).")
+# tracked artifacts in render order: (file, bench flag, one-liner)
+ARTIFACTS = [
+    ("BENCH_dse.json", "--dse",
+     "mesh-simulator execution of both workloads + DSE Pareto sweep"),
+    ("BENCH_kernels.json", "(default)",
+     "packed kernel micro-benchmarks + roofline model"),
+    ("BENCH_conv.json", "--conv",
+     "binary conv: direct fused vs im2col, packed vs bf16 traffic"),
+    ("BENCH_fused.json", "--fused",
+     "fused popcount-accumulate matmul variants"),
+    ("BENCH_compile.json", "--compile",
+     "graph compiler: plans, launch counts, HBM traffic, Table III"),
+    ("BENCH_serve.json", "--serve",
+     "serving engine: throughput, scaling, stream, ragged padding"),
+    ("BENCH_faults.json", "--faults",
+     "fault injection: SEU / threshold-noise curves + chaos recovery"),
+    ("BENCH_train.json", "--train",
+     "STE training loop closed through fold -> compile -> serve"),
+]
 
 
-def dryrun_summary() -> str:
-    recs = [json.load(open(f))
-            for f in glob.glob("experiments/dryrun/*baseline.json")]
-    ok = [r for r in recs if r.get("ok")]
-    skip = [r for r in recs if not r.get("applicable")]
+def _git_ct(path: str) -> int | None:
+    """Unix commit time of the last commit touching path, or None."""
+    try:
+        out = subprocess.run(
+            ["git", "log", "-1", "--format=%ct", "--", path],
+            cwd=ROOT, capture_output=True, text=True, timeout=30)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    s = out.stdout.strip()
+    return int(s) if out.returncode == 0 and s.isdigit() else None
+
+
+def _load(name: str):
+    path = os.path.join(_HERE, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _ok(flag) -> str:
+    return "**ok**" if flag else "**FAIL**"
+
+
+def _claims(dse_doc) -> str:
+    """The paper-claim scoreboard (abstract of arXiv:2104.01699 vs
+    what BENCH_dse.json measured through the mesh simulator)."""
     out = io.StringIO()
-    print(f"{len(ok)} cells compiled OK, {len(skip)} correctly skipped "
-          f"(long_500k on pure full-attention archs), 0 failures.", file=out)
-    print("\nPer-cell artifacts: `experiments/dryrun/*.json` hold the "
-          "compiled memory analysis, loop-aware FLOPs/bytes "
-          "(repro.runtime.hlo_cost), and per-kind collective bytes.\n",
+    print("| paper claim | source | measured (BENCH_dse.json) | status |",
           file=out)
-    print("| arch | shape | mesh | temp GB/dev | args GB/dev | "
-          "collect GB/dev (ag/ar/rs/a2a/cp) |", file=out)
-    print("|---|---|---|---|---|---|", file=out)
-    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
-        mem = r.get("memory", {})
-        co = r.get("cost2", {}).get("collectives", {})
-        cg = "/".join(f"{co.get(k, 0) / 1e9:.1f}"
-                      for k in ("all-gather", "all-reduce",
-                                "reduce-scatter", "all-to-all",
-                                "collective-permute"))
-        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
-              f"{(mem.get('temp_size_in_bytes') or 0) / 1e9:.1f} | "
-              f"{(mem.get('argument_size_in_bytes') or 0) / 1e9:.1f} | "
-              f"{cg} |", file=out)
+    print("|---|---|---|---|", file=out)
+    if dse_doc is None:
+        print("| — | — | BENCH_dse.json missing: run "
+              f"`{DRIVER} --dse` | **FAIL** |", file=out)
+        return out.getvalue()
+    dse = dse_doc["dse"]
+    floor = dse["min_energy_ratio"]
+    for w in dse["workloads"]:
+        name = w["name"]
+        t, m = w["tulip"], w["mac_baseline"]
+        r = w["energy_ratio_vs_mac"]
+        print(f"| >= {floor:.0f}x energy/classification vs MAC design "
+              f"({name}) | abstract, Tables IV/V | "
+              f"{r:.2f}x ({t['energy_uj']:.0f} vs "
+              f"{m['energy_uj']:.0f} uJ/class) | {_ok(r >= floor)} |",
+              file=out)
+    for w in dse["workloads"]:
+        t, m = w["tulip"], w["mac_baseline"]
+        perf_ok = t["time_ms"] <= m["time_ms"] * 1.05
+        print(f"| no performance penalty ({w['name']}) | abstract | "
+              f"TULIP {t['time_ms']:.1f} ms vs MAC {m['time_ms']:.1f} ms "
+              f"| {_ok(perf_ok)} |", file=out)
+        area_ok = t["area_mm2"] <= m["area_mm2"] * 1.05
+        print(f"| no area penalty ({w['name']}) | SS-V | "
+              f"TULIP {t['area_mm2']:.2f} mm2 vs MAC "
+              f"{m['area_mm2']:.2f} mm2 | {_ok(area_ok)} |", file=out)
+    acc = all(w["oracle_bit_identical"] and w["mac_logits_bit_identical"]
+              for w in dse["workloads"])
+    print("| no accuracy penalty (exact BNN arithmetic) | abstract | "
+          "simulator logits bit-identical to the compiled oracle and "
+          f"the MAC baseline on every workload | {_ok(acc)} |", file=out)
+    t3 = all(w["cycles_match_table3"] for w in dse["workloads"])
+    print("| per-layer loop counts (P, Z) | Table III | measured "
+          "refetch counts from execution equal table3_rows() on every "
+          f"conv layer, both designs | {_ok(t3)} |", file=out)
+    pe = all(w["pe_programs_ok"] and w["pe_programs_checked"] > 0
+             for w in dse["workloads"])
+    n = sum(w["pe_programs_checked"] for w in dse["workloads"])
+    print("| threshold ops run as TULIP-PE programs | SS-III | "
+          f"{n} sampled nodes re-executed through core.tulip_pe "
+          f"schedules, all bit-correct | {_ok(pe)} |", file=out)
     return out.getvalue()
 
 
-def perf_variants() -> str:
-    """Before/after table for every non-baseline variant cell."""
-    base = {}
-    for f in glob.glob("experiments/dryrun/*__single__baseline.json"):
-        r = json.load(open(f))
-        if r.get("ok"):
-            base[(r["arch"], r["shape"])] = r
+def _dse_section(doc) -> str:
+    dse = doc["dse"]
     out = io.StringIO()
-    print("| cell | variant | flops /dev | Δ | bytes /dev | Δ | "
-          "coll GB | Δ | temp GB | Δ |", file=out)
-    print("|---|---|---|---|---|---|---|---|---|---|", file=out)
-    for f in sorted(glob.glob("experiments/dryrun/*__single__*.json")):
-        r = json.load(open(f))
-        if r.get("variant") == "baseline" or not r.get("ok"):
-            continue
-        b = base.get((r["arch"], r["shape"]))
-        if not b:
-            continue
-        def g(rec, k):
-            return rec.get("cost2", {}).get(k, 0.0)
-        def mem(rec):
-            return (rec.get("memory", {}).get("temp_size_in_bytes") or 0)
-        def pct(a, bb):
-            return f"{(a / bb - 1) * 100:+.0f}%" if bb else "-"
-        print(f"| {r['arch']} x {r['shape']} | {r['variant']} | "
-              f"{g(r, 'flops'):.2e} | {pct(g(r, 'flops'), g(b, 'flops'))} | "
-              f"{g(r, 'bytes'):.2e} | {pct(g(r, 'bytes'), g(b, 'bytes'))} | "
-              f"{g(r, 'collective_bytes') / 1e9:.1f} | "
-              f"{pct(g(r, 'collective_bytes'), g(b, 'collective_bytes'))} | "
-              f"{mem(r) / 1e9:.1f} | {pct(mem(r), mem(b))} |", file=out)
+    cal = dse["calibration"]
+    print(f"Calibrated against Tables IV/V: w0={cal['w0']:.1f}, "
+          f"bw_fc={cal['bw_fc']:.3f}, a_int={cal['a_int']:.3f}, "
+          f"g={cal['g']:.3f}, pe_act={cal['pe_act']:.2f}.  Default "
+          f"config: {dse['default_config']['name']}.\n", file=out)
+    print("| workload | config | energy uJ/class | time ms | "
+          "TOp/s/W | area mm2 | ratio vs MAC |", file=out)
+    print("|---|---|---|---|---|---|---|", file=out)
+    for w in dse["workloads"]:
+        for side in ("tulip", "mac_baseline"):
+            m = w[side]
+            ratio = (f"{w['energy_ratio_vs_mac']:.2f}x"
+                     if side == "tulip" else "1.00x")
+            print(f"| {w['name']} | {m['config']} | "
+                  f"{m['energy_uj']:.1f} | {m['time_ms']:.1f} | "
+                  f"{m['eff_tops_w']:.2f} | {m['area_mm2']:.2f} | "
+                  f"{ratio} |", file=out)
+    print("\nDesign-space sweep (PE count x register bits x schedule): "
+          f"{len(dse['sweep']) // max(len(dse['workloads']), 1)} "
+          "configs per workload.  Pareto front on (energy, latency, "
+          "area):\n", file=out)
+    for wl, names in dse["pareto_fronts"].items():
+        print(f"* {wl}: {', '.join(names)}", file=out)
+    print("\nContext (PAPERS.md operating points, different "
+          "technologies/benchmarks — not directly comparable):\n",
+          file=out)
+    for p in dse["comparison_points"]:
+        print(f"* {p['name']}: {p['eff_tops_w']:.1f} TOp/s/W "
+              f"({p['source']})", file=out)
     return out.getvalue()
 
 
-def main():
-    cells = R.load_cells()
-    buf = io.StringIO()
+def _kernels_section(doc) -> str:
+    out = io.StringIO()
+    m = doc.get("measured", {})
+    print("| kernel | wall s |", file=out)
+    print("|---|---|", file=out)
+    for k, v in m.items():
+        if isinstance(v, float):
+            print(f"| {k} | {v:.2e} |", file=out)
+    rows = doc.get("roofline", [])
+    if rows:
+        print("\nRoofline model (bf16 vs packed weights):\n", file=out)
+        print("| m,k,n | HBM ratio bf16/packed-w | arith intensity "
+              "packed |", file=out)
+        print("|---|---|---|", file=out)
+        for r in rows:
+            print(f"| {r['m']},{r['k']},{r['n']} | "
+                  f"{r['hbm_ratio_bf16_over_packed_w']:.1f}x | "
+                  f"{r['arith_intensity_packed_w']:.1f} |", file=out)
+    return out.getvalue()
 
-    def log(*a):
-        print(*a, file=buf)
 
-    table1.run(log)
-    table2.run(log)
-    table3.run(log)
-    table4_5.run(log)
-    tables_txt = buf.getvalue()
+def _conv_section(doc) -> str:
+    out = io.StringIO()
+    print("| layer | packed/bf16 bytes | direct speedup vs im2col | "
+          "bit identical |", file=out)
+    print("|---|---|---|---|", file=out)
+    for r in doc.get("conv", []):
+        print(f"| {r['name']} | "
+              f"{r['packed_vs_bf16_bytes_ratio']:.1f}x smaller | "
+              f"{r['direct_speedup']:.2f}x | "
+              f"{_ok(r['bit_identical'])} |", file=out)
+    return out.getvalue()
 
-    md = open("EXPERIMENTS.md.in").read() if os.path.exists(
-        "EXPERIMENTS.md.in") else None
-    parts = {
-        "HW": HW,
-        "DRYRUN": dryrun_summary(),
-        "ROOFLINE_SINGLE": R.table(cells, "single"),
-        "ROOFLINE_MULTI": R.table(cells, "multi"),
-        "VARIANTS": perf_variants(),
-        "PAPER_TABLES": "```\n" + tables_txt + "\n```",
-    }
-    if md is None:
-        for k, v in parts.items():
-            print(f"\n<!-- {k} -->\n{v}")
-        return parts
-    for k, v in parts.items():
-        md = md.replace("{{" + k + "}}", v)
-    with open("EXPERIMENTS.md", "w") as f:
-        f.write(md)
-    print("EXPERIMENTS.md written")
-    return parts
+
+def _fused_section(doc) -> str:
+    out = io.StringIO()
+    print("| m,k,n | out bytes fused/unfused | CSA speedup | "
+          "backends bit identical |", file=out)
+    print("|---|---|---|---|", file=out)
+    for r in doc.get("fused", []):
+        print(f"| {r['m']},{r['k']},{r['n']} | "
+              f"{r['out_bytes_ratio']:.2f} | {r['csa_speedup']:.2f}x | "
+              f"{_ok(r['bit_identical_backends'])} |", file=out)
+    return out.getvalue()
+
+
+def _compile_section(doc) -> str:
+    out = io.StringIO()
+    print("| workload | launches (compiled/legacy) | HBM packed/bf16 | "
+          "Table III | forward s |", file=out)
+    print("|---|---|---|---|---|", file=out)
+    for r in doc.get("workloads", []):
+        fwd = r.get("forward_xla_s")
+        fwd_s = f"{fwd:.3f}" if fwd is not None else "—"
+        print(f"| {r['name']} | {r['launches_compiled']}/"
+              f"{r['launches_legacy']} | "
+              f"{r['hbm_ratio']:.1f}x smaller | "
+              f"{_ok(r['table3_matches_mapping'])} | {fwd_s} |",
+              file=out)
+    return out.getvalue()
+
+
+def _serve_section(doc) -> str:
+    out = io.StringIO()
+    sc, st = doc["scaling"], doc["stream"]
+    best = max(doc.get("throughput", []),
+               key=lambda r: r["rows_per_s"], default=None)
+    if best:
+        print(f"* peak throughput: {best['rows_per_s']:.0f} rows/s at "
+              f"batch {best['batch']}", file=out)
+    if "speedup" in sc:
+        print(f"* scaling: {sc['speedup']:.2f}x on "
+              f"{sc.get('devices_n', '?')} devices at batch "
+              f"{sc['batch']} (gate: > 1)", file=out)
+    print(f"* continuous batching: {st['requests']} requests, "
+          f"{st['rows_per_s_stream']:.0f} rows/s streamed, "
+          f"inflight peak {st['inflight_peak']}", file=out)
+    worst = max((r.get("overhead_vs_exact", 0)
+                 for r in doc.get("padding", [])), default=None)
+    if worst is not None:
+        print(f"* ragged padding: worst overhead_vs_exact = "
+              f"{worst:.2f} (gate: < 1.5)", file=out)
+    print(f"* bit identity: {doc.get('bit_identity', 'n/a')}", file=out)
+    return out.getvalue()
+
+
+def _faults_section(doc) -> str:
+    out = io.StringIO()
+    seu, th, ch = doc["seu"], doc["thresholds"], doc["chaos"]
+    print(f"* SEU curve: argmax match {seu[0]['argmax_match']:.2f} at "
+          f"{seu[0]['n_flips']} flips -> "
+          f"{seu[-1]['argmax_match']:.2f} at {seu[-1]['n_flips']}",
+          file=out)
+    print(f"* threshold noise: argmax match "
+          f"{th[0]['argmax_match']:.2f} at sigma {th[0]['sigma']} -> "
+          f"{th[-1]['argmax_match']:.2f} at sigma {th[-1]['sigma']}",
+          file=out)
+    inv = all(ch.get(k) is True for k in
+              ("zero_lost_futures", "poison_isolated",
+               "fallback_bit_identical"))
+    print(f"* chaos storm: {ch['requests']} requests, "
+          f"{ch['flight_faults']} in-flight faults, recovery "
+          f"invariants {_ok(inv)}", file=out)
+    return out.getvalue()
+
+
+def _train_section(doc) -> str:
+    out = io.StringIO()
+    print("| model | steps | eval acc (chance) | fold/serve/ckpt "
+          "bit-consistent | steps/s |", file=out)
+    print("|---|---|---|---|---|", file=out)
+    for r in doc.get("models", []):
+        bits = all((r["fold_bit_consistent"], r["serve_bit_consistent"],
+                    r["ckpt_roundtrip_exact"]))
+        print(f"| {r['name']} | {r['steps']} | {r['eval_acc']:.3f} "
+              f"({r['chance']:.2f}) | {_ok(bits)} | "
+              f"{r['steps_per_s']:.1f} |", file=out)
+    return out.getvalue()
+
+
+SECTIONS = {
+    "BENCH_dse.json": _dse_section,
+    "BENCH_kernels.json": _kernels_section,
+    "BENCH_conv.json": _conv_section,
+    "BENCH_fused.json": _fused_section,
+    "BENCH_compile.json": _compile_section,
+    "BENCH_serve.json": _serve_section,
+    "BENCH_faults.json": _faults_section,
+    "BENCH_train.json": _train_section,
+}
+
+
+def render() -> str:
+    docs = {name: _load(name) for name, _, _ in ARTIFACTS}
+    driver_ct = _git_ct(DRIVER)
+    out = io.StringIO()
+    print("# EXPERIMENTS — paper-reproduction report", file=out)
+    print(file=out)
+    print("<!-- GENERATED by benchmarks/make_experiments_md.py; do "
+          "not edit by hand.  CI regenerates this file and fails on "
+          "drift. -->", file=out)
+    print(file=out)
+    print("Reproduction scoreboard for *A Configurable BNN ASIC using "
+          "a Network of Programmable Threshold Logic Standard Cells* "
+          "(TULIP, arXiv:2104.01699).  Every number below is read "
+          "from a tracked `benchmarks/BENCH_*.json` artifact; rerun "
+          f"`PYTHONPATH=src python {DRIVER} <flag>` to refresh one, "
+          "then `python benchmarks/make_experiments_md.py` to "
+          "re-render.", file=out)
+    print(file=out)
+    print("## Paper claims vs measured", file=out)
+    print(file=out)
+    print(_claims(docs.get("BENCH_dse.json")), file=out)
+
+    print("## Measurement provenance", file=out)
+    print(file=out)
+    print("| artifact | flag | jax | backend | device | devices | "
+          "smoke |", file=out)
+    print("|---|---|---|---|---|---|---|", file=out)
+    stale = []
+    for name, flag, _ in ARTIFACTS:
+        doc = docs[name]
+        if doc is None:
+            print(f"| {name} | `{flag}` | — | — | — | — | missing |",
+                  file=out)
+            continue
+        env = doc.get("env", {})
+        smoke = doc.get("smoke", doc.get("dse", {}).get("smoke"))
+        print(f"| {name} | `{flag}` | {env.get('jax_version', '?')} | "
+              f"{env.get('backend', '?')} | "
+              f"{env.get('device_kind', '?')} | "
+              f"{env.get('device_count', '?')} | {smoke} |", file=out)
+        art_ct = _git_ct(f"benchmarks/{name}")
+        if (driver_ct is not None and art_ct is not None
+                and art_ct < driver_ct):
+            stale.append((name, flag))
+    if stale:
+        print(file=out)
+        print("> **Staleness:** the following artifacts were last "
+              "committed before the current bench driver "
+              f"(`{DRIVER}`); their numbers may come from an older "
+              "harness.  Rerun to refresh:", file=out)
+        for name, flag in stale:
+            print(f"> * {name} (`{flag}`)", file=out)
+    print(file=out)
+
+    for name, flag, blurb in ARTIFACTS:
+        doc = docs[name]
+        if doc is None:
+            continue
+        print(f"## {name} — {blurb}", file=out)
+        print(file=out)
+        print(SECTIONS[name](doc), file=out)
+    print("---", file=out)
+    print(file=out)
+    print("Schema + invariant gates for every artifact: "
+          "`python tools/check_bench_schema.py benchmarks/"
+          "BENCH_*.json` (see `--list-schemas`).  Rendering is "
+          "deterministic given the artifacts and git history, so "
+          "`make_experiments_md.py --check` is a CI drift gate.",
+          file=out)
+    return out.getvalue()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="don't write; exit 1 if EXPERIMENTS.md is "
+                         "not exactly what would be rendered")
+    args = ap.parse_args(argv)
+    text = render()
+    if args.check:
+        on_disk = open(OUT).read() if os.path.exists(OUT) else ""
+        if on_disk != text:
+            print("EXPERIMENTS.md is stale: regenerate with "
+                  "`python benchmarks/make_experiments_md.py`",
+                  file=sys.stderr)
+            return 1
+        print("EXPERIMENTS.md is up to date")
+        return 0
+    with open(OUT, "w") as f:
+        f.write(text)
+    print(f"wrote {OUT}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -161,4 +161,40 @@ print(f"[serve] BNNServer over the compiled BinaryNet: "
       f"{st['bucket_hit_rate']:.2f}, occupancy {st['occupancy']:.2f}, "
       f"{st['hbm_bytes_per_request'] / 1e6:.2f}MB HBM/request, "
       f"== direct apply ✓")
+
+# --- 6. the silicon: simulate the compiled net on a TULIP-PE mesh ---
+from repro.core.energy import CellSpecs, calibrate, calibrate_tulip, \
+    evaluate
+from repro.core.workloads import WORKLOADS
+from repro.sim import MeshConfig, simulate
+from repro.sim.dse import pareto_front, sweep_configs
+
+# the SAME CompiledBNN from §4 runs node-by-node on the paper's mesh
+# (256 PEs x 16-bit registers): binary layers execute as partitioned
+# integer popcounts with sampled nodes re-run through real
+# core.tulip_pe programs, and the logits must equal cb.apply exactly
+cells = CellSpecs()
+system = calibrate_tulip(WORKLOADS, calibrate(WORKLOADS, cells), cells)
+sim = simulate(cbn, cnn, jax.random.normal(jax.random.PRNGKey(10),
+                                           (1, 32, 32, 3), jnp.float32),
+               cells=cells, system=system, pe_samples=1)
+assert sim.oracle_bit_identical and sim.pe_programs_ok
+print(f"[sim] BinaryNet on {sim.arch_name}: "
+      f"{sim.energy_per_class_j * 1e6:.0f} uJ/class, "
+      f"{sim.time_s * 1e3:.1f} ms, {sim.area_um2 / 1e6:.2f} mm2, "
+      f"logits == apply ✓ ({sim.pe_nodes_checked} PE programs checked)")
+
+# the DSE sweep prices every mesh config through the calibrated model
+# (kernels_bench.py --dse executes + gates this; we just read the row)
+wl = WORKLOADS["binarynet"]
+pts = []
+for cfg in sweep_configs(smoke=True):
+    rep = evaluate(wl, cfg.arch(), cells, system,
+                   cfg.pe_node_cycles if cfg.n_pes else None)
+    pts.append({"name": cfg.name, "energy_uj": rep.energy_j() * 1e6,
+                "time_ms": rep.time_s() * 1e3,
+                "area_mm2": cfg.area_um2(cells) / 1e6})
+for p in pareto_front(pts, keys=("energy_uj", "time_ms", "area_mm2")):
+    print(f"[dse]  Pareto: {p['name']:<18s} {p['energy_uj']:7.1f} uJ  "
+          f"{p['time_ms']:6.1f} ms  {p['area_mm2']:.2f} mm2")
 print("quickstart OK")

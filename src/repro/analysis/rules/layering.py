@@ -89,6 +89,7 @@ def _violates(imported: str, forbidden_prefix: str) -> bool:
 def _check_layering(module: Module, run: LintRun) -> Iterable[Tuple[int, str]]:
     in_kernels = module.in_dir("kernels")
     in_serving = module.in_dir("serving")
+    in_sim = module.in_dir("sim")
     # the linter half of repro.analysis must stay importable with
     # nothing installed (the CI gate runs it before pip gets a chance)
     bare_analysis = module.in_dir("analysis") and not module.endswith(
@@ -108,6 +109,16 @@ def _check_layering(module: Module, run: LintRun) -> Iterable[Tuple[int, str]]:
                 f"serving module imports `{name}` — fault injection "
                 f"wraps the server from outside (no serving -> "
                 f"robustness cycle)",
+            )
+        elif in_sim and (
+            _violates(name, "repro.serving")
+            or _violates(name, "repro.robustness")
+        ):
+            yield (
+                line,
+                f"sim module imports `{name}` — the mesh simulator is "
+                f"a measurement instrument over core/graph/kernels, "
+                f"never a deployment path (DESIGN.md §14)",
             )
         elif bare_analysis and (
             name.split(".")[0] in ("jax", "jaxlib", "numpy")

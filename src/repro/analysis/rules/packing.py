@@ -107,6 +107,10 @@ _SIGN_SITES = {
     "models/quantize.py": (ast.Gt, ast.GtE),
     "train/models.py": (ast.Gt, ast.GtE),
     "train/export.py": (ast.Gt,),
+    # the mesh simulator rebuilds +-1 operands from packed words to run
+    # binary layers as exact integer popcounts (DESIGN.md §14); it
+    # mirrors the pack convention and is gated bit-identical to apply
+    "sim/simulator.py": (ast.Gt,),
 }
 
 _WHERE_CHAINS = frozenset({"jnp.where", "np.where", "numpy.where", "jax.numpy.where"})

@@ -4,6 +4,33 @@ Methodology: all per-cell constants come from the paper (Table I/II;
 435 MHz clock — Table II's "2300" is 2.3 ns: 17 cy x 2.3 ns = 39 ns).
 The TULIP-PE cycle count comes from *our* RPO scheduler, not the paper.
 
+Units, throughout this module: cycles are clock cycles at
+``CellSpecs.freq_hz`` (2.3 ns), times are seconds, energies Joules,
+areas um^2, powers are stored in the unit their Table I/II source used
+(uW for neurons, mW for MAC/PE) and converted at the point of use.
+``LayerReport.ops`` counts multiply-accumulates x2 (the paper's
+GOp convention), so ``eff_tops_w`` is directly comparable to the
+TOp/s/W figures quoted for XNE / XNORBIN / ChewBaccaNN in PAPERS.md.
+
+Structure: a layer's cost is a pure function of a :class:`UnitCounts`
+row — how many passes (P), OFM batches, and unit-cycles the schedule
+takes — and the mapping-derived counts live in ``conv_counts`` /
+``fc_counts``.  This split is the execution hook the mesh simulator
+(repro.sim) uses: it executes a compiled plan, *measures* its own
+P / batch / cycle counters, and charges energy through the same
+``conv_report`` / ``fc_report`` formulas, so a closed-form prediction
+and a measured run can only differ if the counts differ (that parity
+is asserted, per layer, by tests/test_sim.py).  ``evaluate`` accepts a
+``pe_cycles_fn`` override so a design-space point (smaller register
+file, naive schedule) prices its nodes with its own scheduler output.
+
+Failure modes: ``pe_cycles`` raises nothing but silently chunks nodes
+wider than the 1023-input adder-tree capacity (paper §IV-C); callers
+modelling a *different* capacity must pass their own ``pe_cycles_fn``
+(see repro.sim.mesh.MeshConfig.pe_node_cycles).  ``calibrate`` fits on
+YodaNN observations only — feeding it TULIP rows would leak the
+quantity under test into the fit.
+
 Four system-level unknowns the paper does not disclose are **calibrated
 on the YodaNN baseline only** and TULIP is then *predicted* with the
 same constants, so the ~3x energy-efficiency claim is validated
@@ -131,6 +158,54 @@ def pe_cycles(n_inputs: int, accumulate: bool = False,
 # ------------------------------------------------------------------ #
 # per-layer timing + energy                                            #
 # ------------------------------------------------------------------ #
+@dataclass(frozen=True)
+class UnitCounts:
+    """Schedule counts for one layer — predicted by the mapping model
+    (``conv_counts`` / ``fc_counts``) or *measured* by the mesh
+    simulator's execution loops (repro.sim.simulator).  The report
+    formulas below consume only this row, so prediction and execution
+    are priced identically by construction."""
+
+    uses_pe: bool
+    P: int                 # partial-sum passes over the IFM set
+    n_batches: int         # OFM batches (the mapping's Z)
+    unit_cycles: int       # cycles one unit spends per output node
+    ifm_per_pass: int      # resident IFMs (conv) / streamed chunk (fc)
+    n_units: int
+    ofm_batch: int
+
+
+def conv_counts(layer, arch: ArchParams, pe_cycles_fn=None,
+                spec: Optional[CellSpecs] = None) -> UnitCounts:
+    """Mapping-predicted counts for a conv layer.  ``pe_cycles_fn``
+    replaces the default 16-bit-register compact-schedule cycle model
+    (signature: ``fn(n_inputs, accumulate, compare) -> int``)."""
+    m = map_conv(layer, arch)
+    cyc = pe_cycles_fn or pe_cycles
+    if m.uses_pe:
+        unit_cycles = cyc(m.node_inputs, accumulate=(m.P > 1),
+                          compare=True)
+    else:
+        unit_cycles = mac_cycles(m.node_inputs, spec or CellSpecs())
+    return UnitCounts(m.uses_pe, m.P, math.ceil(layer.z2 / m.ofm_batch),
+                      unit_cycles, m.ifm_per_pass, m.n_units,
+                      m.ofm_batch)
+
+
+def fc_counts(layer, arch: ArchParams, pe_cycles_fn=None) -> UnitCounts:
+    """Mapping-predicted counts for an FC layer (see conv_counts)."""
+    m = map_fc(layer, arch)
+    cyc = pe_cycles_fn or pe_cycles
+    if m.uses_pe:
+        unit_cycles = cyc(m.node_inputs, accumulate=(m.P > 1),
+                          compare=True)
+    else:
+        unit_cycles = 0         # YodaNN FC is fetch-bound (see fc_report)
+    return UnitCounts(m.uses_pe, m.P, math.ceil(layer.n_out / m.ofm_batch),
+                      unit_cycles, m.ifm_per_pass, m.n_units,
+                      m.ofm_batch)
+
+
 @dataclass
 class LayerReport:
     name: str
@@ -148,63 +223,56 @@ class LayerReport:
         return self.e_compute_j + self.e_mem_j
 
 
-def _conv_layer_report(layer, arch: ArchParams, spec: CellSpecs,
-                       sys: SystemParams) -> LayerReport:
-    m = map_conv(layer, arch)
+def conv_report(layer, arch: ArchParams, spec: CellSpecs,
+                sys: SystemParams, c: UnitCounts) -> LayerReport:
+    """Price a conv layer from its :class:`UnitCounts` row (predicted
+    or measured — the formulas cannot tell the difference)."""
     pixels = layer.x2 * layer.y2
-    n_batches = math.ceil(layer.z2 / m.ofm_batch)
     act_bits = 12 if layer.integer else 1
 
-    if m.uses_pe:
-        unit_cycles = pe_cycles(m.node_inputs, accumulate=(m.P > 1),
-                                compare=True)
+    if c.uses_pe:
         unit_power_w = spec.pe_power_mw * 1e-3 * sys.pe_act
     else:
-        unit_cycles = mac_cycles(m.node_inputs, spec)
         base_mw = spec.mac_power_mw if arch.n_pes == 0 else spec.smac_power_mw
         # activity factors; binary layers gate 11/12 datapath bits (§V-A)
         unit_power_w = base_mw * 1e-3 * (sys.a_int if layer.integer
                                          else sys.g)
 
     # shared window delivery: w0 cycles per pixel per 32 resident IFMs
-    win = sys.w0 * (m.ifm_per_pass / 32.0)
-    per_pixel = max(unit_cycles, win)
-    pixel_passes = m.P * n_batches * pixels
+    win = sys.w0 * (c.ifm_per_pass / 32.0)
+    per_pixel = max(c.unit_cycles, win)
+    pixel_passes = c.P * c.n_batches * pixels
     wall_cycles = pixel_passes * per_pixel
-    busy_cycles = pixel_passes * unit_cycles
+    busy_cycles = pixel_passes * c.unit_cycles
     time_s = wall_cycles / spec.freq_hz
 
     # off-chip traffic: P*Z refetches of the resident IFM set + weights
-    offchip_bits = (m.P * m.Z * m.ifm_per_pass * layer.x1 * layer.y1
-                    * act_bits)
-    offchip_bits += m.P * n_batches * m.ofm_batch * layer.k ** 2 \
-        * m.ifm_per_pass                      # binary weights per batch
+    offchip_bits = (c.P * c.n_batches * c.ifm_per_pass * layer.x1
+                    * layer.y1 * act_bits)
+    offchip_bits += c.P * c.n_batches * c.ofm_batch * layer.k ** 2 \
+        * c.ifm_per_pass                      # binary weights per batch
     offchip_bits += layer.z2 * layer.x2 * layer.y2 * act_bits  # OFM out
 
-    avg_active = layer.z2 / (n_batches * m.ofm_batch) * m.n_units
+    avg_active = layer.z2 / (c.n_batches * c.ofm_batch) * c.n_units
     e_compute = avg_active * unit_power_w * (busy_cycles / spec.freq_hz)
     e_mem = offchip_bits * sys.e_off_pj * 1e-12
-    return LayerReport(layer.name, "pe" if m.uses_pe else "mac", layer.ops,
+    return LayerReport(layer.name, "pe" if c.uses_pe else "mac", layer.ops,
                        busy_cycles, wall_cycles, time_s, e_compute, e_mem,
                        offchip_bits)
 
 
-def _fc_layer_report(layer, arch: ArchParams, spec: CellSpecs,
-                     sys: SystemParams) -> LayerReport:
+def fc_report(layer, arch: ArchParams, spec: CellSpecs,
+              sys: SystemParams, c: UnitCounts) -> LayerReport:
     """FC layers are weight-stream bound on both designs (paper §V-A
     estimates them as element-wise matrix multiplication)."""
-    m = map_fc(layer, arch)
-    n_batches = math.ceil(layer.n_out / m.ofm_batch)
     weight_bits = layer.n_in * layer.n_out
     offchip_bits = weight_bits + layer.n_in * 12 + layer.n_out * 12
     fetch_cycles = weight_bits / sys.bw_fc
-    if m.uses_pe:
+    if c.uses_pe:
         # TULIP: binary FC on the PEs, clock-gated while weight-starved
-        unit_cycles = pe_cycles(m.node_inputs, accumulate=(m.P > 1),
-                                compare=True)
-        busy_cycles = m.P * n_batches * unit_cycles
+        busy_cycles = c.P * c.n_batches * c.unit_cycles
         wall_cycles = max(busy_cycles, fetch_cycles)
-        avg_active = layer.n_out / (n_batches * m.ofm_batch) * m.n_units
+        avg_active = layer.n_out / (c.n_batches * c.ofm_batch) * c.n_units
         e_compute = avg_active * spec.pe_power_mw * 1e-3 * sys.pe_act \
             * (busy_cycles / spec.freq_hz)
     else:
@@ -217,6 +285,18 @@ def _fc_layer_report(layer, arch: ArchParams, spec: CellSpecs,
     e_mem = offchip_bits * sys.e_off_pj * 1e-12
     return LayerReport(layer.name, "fc", layer.ops, busy_cycles, wall_cycles,
                        time_s, e_compute, e_mem, offchip_bits)
+
+
+def _conv_layer_report(layer, arch: ArchParams, spec: CellSpecs,
+                       sys: SystemParams, pe_cycles_fn=None) -> LayerReport:
+    return conv_report(layer, arch, spec, sys,
+                       conv_counts(layer, arch, pe_cycles_fn, spec))
+
+
+def _fc_layer_report(layer, arch: ArchParams, spec: CellSpecs,
+                     sys: SystemParams, pe_cycles_fn=None) -> LayerReport:
+    return fc_report(layer, arch, spec, sys,
+                     fc_counts(layer, arch, pe_cycles_fn))
 
 
 @dataclass
@@ -248,10 +328,13 @@ class WorkloadReport:
 
 
 def evaluate(workload: Workload, arch: ArchParams, spec: CellSpecs,
-             sys: SystemParams) -> WorkloadReport:
-    layers = [_conv_layer_report(ly, arch, spec, sys)
+             sys: SystemParams, pe_cycles_fn=None) -> WorkloadReport:
+    """Price a whole workload on ``arch``.  ``pe_cycles_fn`` lets a
+    design-space point (repro.sim.mesh) substitute its own node-cycle
+    model; None keeps the default 1023-capacity compact schedule."""
+    layers = [_conv_layer_report(ly, arch, spec, sys, pe_cycles_fn)
               for ly in workload.conv]
-    layers += [_fc_layer_report(ly, arch, spec, sys)
+    layers += [_fc_layer_report(ly, arch, spec, sys, pe_cycles_fn)
                for ly in workload.fc]
     return WorkloadReport(workload.name, arch.name, layers)
 

@@ -26,6 +26,24 @@ Source encoding (integers):
   2 + k       -> output of neuron k (k in 0..3)
   6 + ch      -> external input channel ch (ch in 0..n_ext-1)
   EXT_BASE+16 + bit -> own register bit (ports a/d only)
+
+Failure modes — ``Program.validate()`` (run by ``pack()``, so every
+execution path hits it) rejects structurally impossible programs
+rather than silently mis-simulating them:
+
+* a register source on a shared bus (registers are neuron-local;
+  values travel only by broadcasting through a neuron) — bus
+  conflicts cannot be expressed at all: each cycle carries exactly
+  one ``bus_b``/``bus_c`` source;
+* a ``fresh`` read (direct or via a bus) from a neuron at an equal
+  or later ``stage`` — a combinational loop the silicon cannot form;
+* thresholds outside 0..6 (0 is HOLD; 1..6 are the reachable
+  [2,1,1,1;T] configurations of the mixed-signal cell), and any
+  out-of-bounds external channel, register bit, or write bit.
+
+Cycle counts are the unit of time everywhere downstream: one
+``Cycle`` == one clock tick; ``core.energy`` converts them to seconds
+and Joules, never this module.
 """
 from __future__ import annotations
 

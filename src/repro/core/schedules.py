@@ -13,6 +13,26 @@ Conventions:
   * the full adder is the 2-neuron cascade: carry = MAJ on the carry
     neuron (stage 1), sum = [2,1,1,1;3] with a = ~carry_out (fresh) on the
     sum neuron (stage 2) — 1 cycle per bit.
+
+Invariants the scheduler (and therefore ``repro.sim``) relies on:
+
+* A fragment's ``cycles`` list is its exact cycle cost at placement;
+  builders never emit variable-latency ops.  The hazard lists
+  (``reg_reads``/``reg_writes``, neuron busy intervals, bus/ext
+  usage) must cover *every* access a fragment performs — an
+  undeclared hazard is the one failure mode compaction cannot detect,
+  so builders are written against it and the tests in
+  tests/test_tulip_core.py run compact vs naive placements against
+  each other across tree sizes.
+* Operand widths are in bits, little-endian, and grow as
+  ``ceil(log2(n))+1`` up the adder tree; the popcount of n inputs
+  therefore needs the ``storage_bound(n)`` register bits that
+  ``adder_tree`` budgets and ``sim.mesh.tree_capacity`` inverts into
+  a per-PE fan-in capacity.
+* Fragments assume registers start zeroed unless preloaded via
+  ``run_*``'s ``init_regs``; external bits are consumed at the exact
+  cycles recorded in the ext layout (``make_ext_inputs`` materializes
+  that timetable).
 """
 from __future__ import annotations
 

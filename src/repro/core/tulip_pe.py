@@ -15,6 +15,29 @@ Cycle semantics (see isa.py for the structural model):
      computed this cycle by an earlier-`stage` neuron (the paper's
      "cascade of two binary neurons" full adder);
   3. thr == 0 (HOLD) keeps the output latch unchanged.
+
+Contract (what the rest of the stack relies on):
+
+* Shapes/units: ``ext`` is ``[batch, T, n_ext]`` 0/1 bits with
+  ``T >= len(program)`` (asserted — a short ext is a scheduling bug,
+  not a runtime condition); registers are ``[batch, 4, 16]`` int32
+  0/1; outputs are the latched neuron bits ``[batch, 4]``.  One list
+  entry of ``program`` == one clock cycle; there is no implicit
+  stall, flush, or retiming — cycle counts read off ``len(program)``
+  are the numbers ``core.energy`` charges and ``repro.sim`` measures.
+* ``run_numpy`` and ``run_jax`` are bit-equivalent on every program
+  (property-tested in tests/test_tulip_pe.py; re-asserted on sampled
+  real workload nodes by ``repro.sim.simulate``).  numpy is the
+  reference semantics; the jax path exists so a whole SIMD batch runs
+  as one ``lax.scan``.
+* A neuron computes ``out = (2a + b + c + d >= thr)`` for
+  ``thr in 1..5`` — the [2,1,1,1;T] cell.  Anything larger must be
+  built from programs (adder_tree.py); passing thr > 5 is not modeled
+  silicon and is rejected by ``Program.validate``, not here.
+* ``trace=True`` (numpy) / the returned ``hist`` (jax) expose the
+  per-cycle latched outputs — the only way to read a result that a
+  schedule leaves on a neuron output mid-program (e.g. the on-PE
+  compare bit at ``ScheduleResult.cmp_result_cycle``).
 """
 from __future__ import annotations
 
@@ -37,10 +60,20 @@ MAX_STAGES = 4
 def run_numpy(program: Program, ext: np.ndarray,
               init_regs: Optional[np.ndarray] = None,
               trace: bool = False):
-    """Execute `program` on a batch of PEs.
+    """Execute `program` on a batch of PEs (reference interpreter).
 
-    ext:  [batch, T, n_ext] int/bool external input bits.
-    returns (regs [batch,4,16], outs [batch,4], trace [batch,T,4] or None)
+    ext:  [batch, T, n_ext] int/bool external input bits; T must cover
+          ``len(program)`` cycles (asserted).
+    init_regs: optional [batch,4,16] starting register file (copied,
+          never mutated) — used to preload operands instead of
+          spending cycles loading them through a neuron.
+    returns (regs [batch,4,16], outs [batch,4], trace [batch,T,4] or
+          None) — final registers, final latched outputs, and (with
+          ``trace=True``) every cycle's latched outputs.
+
+    Within a cycle, neurons evaluate in ascending ``stage`` order so a
+    ``fresh`` read observes the same-cycle value of an earlier-stage
+    neuron (the combinational cascade); ties keep program order.
     """
     p = program.pack()
     ext = np.asarray(ext, dtype=np.int32)
@@ -147,7 +180,14 @@ def _step(carry, op, n_ext):
 
 
 def run_jax(program: Program, ext, init_regs=None, unroll: int = 1):
-    """ext: [batch, T, n_ext].  Returns (regs, outs, trace)."""
+    """``lax.scan`` twin of :func:`run_numpy` — bit-equivalent.
+
+    ext: [batch, T, n_ext].  Returns (regs, outs, trace); trace is
+    always materialized here (the scan carries it for free).  The
+    program is packed once into dense arrays and the per-cycle step
+    is vmapped over the batch, so one call simulates the whole SIMD
+    batch; ``unroll`` is forwarded to ``lax.scan``.
+    """
     packed = program.pack()
     T = len(program)
     ops = {k: jnp.asarray(v[:T]) for k, v in packed.items()}

@@ -1,0 +1,16 @@
+"""repro.sim — cycle/energy-accurate TULIP-PE mesh simulation + DSE.
+
+The execution-side answer to the paper's §V comparison: ``simulate``
+runs a compiled BNNSpec on a configurable mesh (:class:`MeshConfig`),
+bit-identical to the ``CompiledBNN.apply`` oracle and priced by the
+calibrated core/energy model; ``run_dse`` sweeps the config space and
+emits the Pareto frontier (benchmarks/BENCH_dse.json).
+
+Layering (RPL006): sim may import core/graph/kernels; it must never
+import the serving or robustness layers.
+"""
+from repro.sim.mesh import MeshConfig, tree_capacity
+from repro.sim.simulator import SimLayer, SimResult, simulate
+
+__all__ = ["MeshConfig", "SimLayer", "SimResult", "simulate",
+           "tree_capacity"]

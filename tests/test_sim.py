@@ -1,0 +1,215 @@
+"""Tier-1 tests for repro.sim (DESIGN.md §14): the mesh simulator's
+oracle bit-identity, measured-vs-predicted schedule parity, the DSE
+sweep's determinism, and the sim layering rule."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import graph
+from repro.core.energy import (CellSpecs, SystemParams, calibrate,
+                               calibrate_tulip, evaluate, pe_cycles)
+from repro.core.mapping import TULIP, YODANN, table3_rows
+from repro.core.workloads import WORKLOADS
+from repro.kernels.ops import binarize_pack
+from repro.sim import MeshConfig, simulate, tree_capacity
+from repro.sim.dse import pareto_front, sweep_configs
+
+BACKENDS = ["xla", "interpret"]
+
+
+# ------------------------------------------------------------------ #
+# mesh model                                                           #
+# ------------------------------------------------------------------ #
+def test_tree_capacity_bands():
+    assert tree_capacity(6) == 127
+    assert tree_capacity(8) == 255
+    assert tree_capacity(10) == 511
+    assert tree_capacity(12) == 1023
+    assert tree_capacity(16) == 1023       # accumulator cap binds
+    with pytest.raises(ValueError):
+        tree_capacity(5)
+
+
+def test_mesh_config_validation():
+    with pytest.raises(ValueError):
+        MeshConfig(schedule="greedy")
+    with pytest.raises(ValueError):
+        MeshConfig(reg_bits=4)
+    assert MeshConfig.mac_baseline().n_pes == 0
+    assert MeshConfig().arch().name == TULIP.name
+    assert MeshConfig.mac_baseline().arch().name == YODANN.name
+
+
+def test_pe_node_cycles_matches_energy_model():
+    """MeshConfig at paper defaults IS energy.pe_cycles — the sweep's
+    per-config cycle hook must agree with the closed-form model on
+    the config the model was calibrated for."""
+    m = MeshConfig()
+    rng = np.random.default_rng(0)
+    ns = [1, 2, 3, 17, 255, 256, 1023, 1024, 4096, 9216]
+    ns += [int(n) for n in rng.integers(1, 12000, size=20)]
+    for n in ns:
+        for acc in (False, True):
+            for cmp_ in (False, True):
+                assert m.pe_node_cycles(n, accumulate=acc,
+                                        compare=cmp_) == \
+                    pe_cycles(n, accumulate=acc, compare=cmp_), n
+
+
+# ------------------------------------------------------------------ #
+# simulator vs oracle                                                  #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mlp_sim_bit_identical(backend):
+    cb = graph.compile_dense_stack(256, [128, 64, 16], backend=backend)
+    params = cb.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 256), jnp.float32)
+    xp = binarize_pack(x)
+    r = simulate(cb, params, xp, pe_samples=2, seed=0)
+    assert r.oracle_bit_identical
+    assert r.counts_match_mapping
+    assert r.pe_nodes_checked > 0 and r.pe_programs_ok
+    assert r.run_jax_crosschecked
+    assert r.energy_per_class_j > 0 and r.time_s > 0
+
+
+@pytest.fixture(scope="module")
+def binarynet_xla():
+    """One compiled BinaryNet + calibrated system + TULIP sim run,
+    shared across the BinaryNet tests (the sim is the expensive
+    part)."""
+    cb = graph.compile(WORKLOADS["binarynet"], backend="xla")
+    params = cb.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3),
+                          jnp.float32)
+    cells = CellSpecs()
+    system = calibrate_tulip(WORKLOADS, calibrate(WORKLOADS, cells),
+                             cells)
+    tulip = simulate(cb, params, x, cells=cells, system=system,
+                     pe_samples=1, seed=0)
+    return cb, params, x, cells, system, tulip
+
+
+def test_binarynet_sim_bit_identical(binarynet_xla):
+    """The paper workload end to end: simulator logits == apply, and
+    the measured conv P/Z loop structure == the Table III rows."""
+    cb, _, _, _, _, r = binarynet_xla
+    assert r.oracle_bit_identical
+    assert r.counts_match_mapping
+    assert r.pe_nodes_checked > 0 and r.pe_programs_ok
+    got = {d["layer"]: (d["P"], d["Z"]) for d in r.conv_pz()}
+    rows = cb.table3_rows()
+    assert got == {row["layer"]: (row["TULIP_P"], row["TULIP_Z"])
+                   for row in rows}
+
+
+def test_binarynet_sim_bit_identical_interpret():
+    """Same workload with the apply oracle on the interpret backend."""
+    cb = graph.compile(WORKLOADS["binarynet"], backend="interpret")
+    params = cb.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32, 3),
+                          jnp.float32)
+    r = simulate(cb, params, x, pe_samples=1, seed=0)
+    assert r.oracle_bit_identical
+    assert r.counts_match_mapping and r.pe_programs_ok
+
+
+def test_binarynet_mac_baseline_and_energy_ratio(binarynet_xla):
+    """The MAC mesh measures the YodaNN Table III column, identical
+    logits (binary arithmetic is exact on both), and the calibrated
+    model reproduces the paper's >= 3x energy headline."""
+    cb, params, x, cells, system, tulip = binarynet_xla
+    mac = simulate(cb, params, x, mesh=MeshConfig.mac_baseline(),
+                   cells=cells, system=system, pe_samples=0, seed=0,
+                   check_oracle=False)
+    assert np.array_equal(tulip.logits, mac.logits)
+    assert mac.counts_match_mapping
+    got = {d["layer"]: (d["P"], d["Z"]) for d in mac.conv_pz()}
+    rows = table3_rows(WORKLOADS["binarynet"])
+    assert got == {row["layer"]: (row["YodaNN_P"], row["YodaNN_Z"])
+                   for row in rows}
+    ratio = mac.energy_per_class_j / tulip.energy_per_class_j
+    assert ratio >= 3.0
+
+
+# ------------------------------------------------------------------ #
+# DSE properties                                                       #
+# ------------------------------------------------------------------ #
+def test_time_and_area_monotone_in_pe_count():
+    """The DSE's Pareto tension is real: more PEs strictly cut wall
+    time (fewer OFM refetch batches) and strictly cost area, while
+    dynamic energy stays flat (same arithmetic, e_off=0)."""
+    cells = CellSpecs()
+    wl = WORKLOADS["binarynet"]
+    sysp = SystemParams(e_off_pj=0.0)
+    times, areas, energies = [], [], []
+    for n in (64, 128, 256, 512):
+        cfg = MeshConfig(n_pes=n)
+        rep = evaluate(wl, cfg.arch(), cells, sysp,
+                       cfg.pe_node_cycles)
+        times.append(rep.time_s())
+        areas.append(cfg.area_um2(cells))
+        energies.append(rep.energy_j())
+    assert all(a > b for a, b in zip(times, times[1:]))
+    assert all(a < b for a, b in zip(areas, areas[1:]))
+    e0 = energies[0]
+    assert all(abs(e - e0) / e0 < 1e-9 for e in energies)
+
+
+def test_dse_sweep_deterministic():
+    cfgs1, cfgs2 = sweep_configs(smoke=True), sweep_configs(smoke=True)
+    assert cfgs1 == cfgs2
+    cells = CellSpecs()
+    wl = WORKLOADS["binarynet"]
+
+    def points():
+        pts = []
+        for cfg in sweep_configs(smoke=True):
+            rep = evaluate(wl, cfg.arch(), cells, SystemParams(),
+                           cfg.pe_node_cycles if cfg.n_pes else None)
+            pts.append({"name": cfg.name,
+                        "energy_uj": rep.energy_j() * 1e6,
+                        "time_ms": rep.time_s() * 1e3,
+                        "area_mm2": cfg.area_um2(cells) / 1e6})
+        return pts
+
+    f1 = [p["name"] for p in pareto_front(points())]
+    f2 = [p["name"] for p in pareto_front(points())]
+    assert f1 == f2 and f1           # same config set -> same frontier
+
+
+def test_pareto_front_definition():
+    pts = [{"e": 1.0, "t": 2.0}, {"e": 2.0, "t": 1.0},
+           {"e": 2.0, "t": 2.0}, {"e": 1.0, "t": 2.0}]
+    front = pareto_front(pts, keys=("e", "t"))
+    assert {id(p) for p in front} == {id(pts[0]), id(pts[1]),
+                                      id(pts[3])}
+
+
+# ------------------------------------------------------------------ #
+# layering (RPL006)                                                    #
+# ------------------------------------------------------------------ #
+def test_rpl006_sim_never_imports_serving(tmp_path):
+    from repro.analysis.lint import lint_files
+
+    bad = tmp_path / "sim" / "bad.py"
+    bad.parent.mkdir()
+    bad.write_text("from repro.serving import BNNServer\n"
+                   "import repro.robustness.seu\n")
+    findings = lint_files([bad], root=tmp_path)
+    assert [f.rule for f in findings] == ["RPL006", "RPL006"]
+
+    ok = tmp_path / "sim" / "ok.py"
+    ok.write_text("from repro.core.energy import CellSpecs\n"
+                  "from repro.graph.compile import CompiledBNN\n")
+    assert lint_files([ok], root=tmp_path) == []
+
+
+def test_rpl006_real_sim_package_is_clean():
+    from repro.analysis.lint import lint_paths, repo_root
+
+    sim_dir = repo_root() / "src" / "repro" / "sim"
+    findings = [f for f in lint_paths([sim_dir]) if f.rule == "RPL006"]
+    assert findings == []

@@ -18,6 +18,14 @@ train->fold->compile->serve loop; the bit-consistency invariants
 (folded serving forward EXACTLY equals the training eval forward,
 including through BNNServer, checkpoint round-trip exact) and the
 eval-accuracy-beats-chance-by-margin gate are likewise unconditional.
+DSE artifacts (BENCH_dse*.json, ISSUE 10) carry the mesh-simulator
+reproduction of the paper's SS-V comparison: per-workload execution
+gates (simulator logits bit-identical to the CompiledBNN.apply
+oracle AND to the MAC baseline, sampled PE programs correct,
+measured P/Z loop counts equal to table3_rows()) and the headline
+energy_ratio_vs_mac >= min_energy_ratio (the paper's "at least 3x")
+are enforced unconditionally, plus the Pareto fronts must reference
+only swept config names.
 
 ``--gate`` additionally enforces the full-run perf acceptance criteria
 on a tracked (non-smoke) serve artifact:
@@ -78,6 +86,27 @@ TRAIN_MODEL_KEYS = ("name", "steps", "global_batch", "num_classes",
 # and the learning gate hold on smoke and full artifacts alike.
 TRAIN_INVARIANTS = ("fold_bit_consistent", "serve_bit_consistent",
                     "ckpt_roundtrip_exact")
+DSE_TOP = ("smoke", "min_energy_ratio", "calibration",
+           "default_config", "workloads", "sweep", "pareto_fronts",
+           "comparison_points")
+DSE_WORKLOAD_KEYS = ("name", "dataset", "batch",
+                     "oracle_bit_identical", "mac_logits_bit_identical",
+                     "pe_programs_checked", "pe_programs_ok",
+                     "run_jax_crosschecked", "cycles_match_table3",
+                     "matches_closed_form", "table3", "tulip",
+                     "mac_baseline", "energy_ratio_vs_mac")
+DSE_METRIC_KEYS = ("config", "energy_uj", "time_ms", "ops_mop",
+                   "perf_gops", "eff_tops_w", "area_mm2",
+                   "wall_cycles")
+DSE_SWEEP_KEYS = ("workload", "name", "n_pes", "reg_bits", "schedule",
+                  "n_macs", "energy_uj", "time_ms", "area_mm2",
+                  "eff_tops_w", "pareto")
+# The simulator contract (ISSUE 10): execution correctness gates hold
+# on smoke and full artifacts alike — an artifact whose simulator
+# diverged from the oracle, or whose measured loop counts disagree
+# with table3_rows(), is broken regardless of run size.
+DSE_INVARIANTS = ("oracle_bit_identical", "mac_logits_bit_identical",
+                  "pe_programs_ok", "cycles_match_table3")
 
 
 def _missing(obj, keys, where):
@@ -216,6 +245,64 @@ def check_train(doc, path):
     return errs
 
 
+def check_dse(doc, path):
+    """BENCH_dse*.json (ISSUE 10): the mesh-simulator DSE artifact.
+    Per-workload execution gates (oracle/MAC bit-identity, PE-program
+    fidelity, table3 loop-count parity) and the >= min_energy_ratio
+    headline are enforced unconditionally; the sweep must be
+    internally consistent (every Pareto-front name is a swept config
+    for that workload, every front row is flagged pareto)."""
+    dse = doc.get("dse")
+    if not isinstance(dse, dict):
+        return [f"{path}: 'dse' must be an object"]
+    errs = _missing(dse, DSE_TOP, f"{path}: dse")
+    if errs:
+        return errs
+    ratio_floor = dse["min_energy_ratio"]
+    wls = dse["workloads"]
+    if not isinstance(wls, list) or not wls:
+        return [f"{path}: dse.workloads must be a non-empty list"]
+    for i, row in enumerate(wls):
+        where = f"{path}: dse.workloads[{i}]"
+        errs += _missing(row, DSE_WORKLOAD_KEYS, where)
+        for k in DSE_INVARIANTS:
+            if k in row and row[k] is not True:
+                errs.append(f"{where}: {k} = {row[k]} — the simulator "
+                            f"correctness contract is violated")
+        ratio = row.get("energy_ratio_vs_mac")
+        if isinstance(ratio, (int, float)) and \
+                isinstance(ratio_floor, (int, float)) and \
+                ratio < ratio_floor:
+            errs.append(f"{where}: energy_ratio_vs_mac = {ratio:.3f} "
+                        f"below the paper's {ratio_floor}x claim")
+        checked = row.get("pe_programs_checked")
+        if isinstance(checked, int) and checked < 1:
+            errs.append(f"{where}: pe_programs_checked = {checked} — "
+                        f"no PE program was actually executed")
+        for side in ("tulip", "mac_baseline"):
+            m = row.get(side)
+            if isinstance(m, dict):
+                errs += _missing(m, DSE_METRIC_KEYS, f"{where}.{side}")
+    sweep = dse["sweep"]
+    if not isinstance(sweep, list) or not sweep:
+        errs.append(f"{path}: dse.sweep must be a non-empty list")
+        sweep = []
+    for i, row in enumerate(sweep):
+        errs += _missing(row, DSE_SWEEP_KEYS, f"{path}: dse.sweep[{i}]")
+    fronts = dse["pareto_fronts"]
+    if not isinstance(fronts, dict) or not fronts:
+        errs.append(f"{path}: dse.pareto_fronts must be a non-empty "
+                    f"object")
+        fronts = {}
+    for wl_name, names in fronts.items():
+        flagged = {r.get("name") for r in sweep
+                   if r.get("workload") == wl_name and r.get("pareto")}
+        if set(names) != flagged:
+            errs.append(f"{path}: dse.pareto_fronts['{wl_name}'] does "
+                        f"not match the pareto-flagged sweep rows")
+    return errs
+
+
 def gate_serve(doc, path):
     """The full-run perf acceptance criteria (never applied to smoke
     artifacts: smoke shapes only measure dispatch overhead)."""
@@ -248,6 +335,7 @@ def check_file(path, gate=False):
     is_serve = "throughput" in doc or "scaling" in doc
     is_faults = "seu" in doc and "chaos" in doc
     is_train = "models" in doc
+    is_dse = "dse" in doc
     if is_serve:
         errs += check_serve(doc, path)
         if gate and not errs:
@@ -262,6 +350,11 @@ def check_file(path, gate=False):
         if gate:
             errs.append(f"{path}: --gate only applies to serve "
                         f"artifacts (train invariants are always on)")
+    elif is_dse:
+        errs += check_dse(doc, path)
+        if gate:
+            errs.append(f"{path}: --gate only applies to serve "
+                        f"artifacts (dse invariants are always on)")
     elif gate:
         errs.append(f"{path}: --gate only applies to serve artifacts")
     return errs
@@ -277,6 +370,8 @@ SCHEMAS = {
                "+".join(CHAOS_INVARIANTS)),
     "train": ("models", "check_train",
               "+".join(TRAIN_INVARIANTS) + "+eval_acc>chance+margin"),
+    "dse": ("dse", "check_dse",
+            "+".join(DSE_INVARIANTS) + "+ratio>=min_energy_ratio"),
 }
 
 
